@@ -1,0 +1,77 @@
+"""Table IV: executor-side complexity scaling — measure per-element cost of
+each algorithm as n grows and as P grows; verify the shapes the paper derives
+(GK Select per-element cost ~flat in n; full sort grows ~log n; sketch sizes
+track Eq. 2)."""
+import math
+import time
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.core import (GKSketch, full_sort_quantile, gk_select,
+                        sample_sketch_params)
+
+
+def timed(fn, reps=3):
+    fn()
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        fn()
+    return (time.perf_counter() - t0) / reps
+
+
+def run(csv_rows):
+    rng = np.random.default_rng(2)
+    q = 0.5
+
+    # per-element executor cost vs n (fixed P)
+    P = 16
+    for n in [10 ** 5, 10 ** 6, 4 * 10 ** 6]:
+        parts = jnp.asarray(rng.normal(size=(P, n // P)).astype(np.float32))
+        t_sel = timed(lambda: jax.block_until_ready(gk_select(parts, q)))
+        t_srt = timed(lambda: jax.block_until_ready(
+            full_sort_quantile(parts, q)))
+        csv_rows.append((f"tab4/gk_select_ns_per_elem/n={n:.0e}",
+                         f"{t_sel / n * 1e9:.2f}", ""))
+        csv_rows.append((f"tab4/full_sort_ns_per_elem/n={n:.0e}",
+                         f"{t_srt / n * 1e9:.2f}", ""))
+
+    # executor scaling vs P (fixed n): O(n/P) per-shard work
+    n = 10 ** 6
+    for P in [4, 16, 64]:
+        parts = jnp.asarray(rng.normal(size=(P, n // P)).astype(np.float32))
+        t_sel = timed(lambda: jax.block_until_ready(gk_select(parts, q)))
+        csv_rows.append((f"tab4/gk_select_vs_P/P={P}",
+                         f"{t_sel * 1e6:.0f}", "us total"))
+
+    # GK sketch size bound: |S| <= (1/eps) log2(eps n) + 1 (Eq. 2)
+    for eps in [0.05, 0.01]:
+        for n in [10 ** 5, 10 ** 6]:
+            sk = GKSketch(eps, head_size=50_000, compress_threshold=10_000)
+            sk.insert_batch(rng.normal(size=n))
+            sk.flush()
+            sk.compress()
+            bound = (1 / eps) * math.log2(eps * n) + 1
+            csv_rows.append((f"tab4/sketch_size/eps={eps}/n={n:.0e}",
+                             f"{sk.size}", f"eq2_bound={bound:.0f} "
+                             f"ok={sk.size <= 3 * bound}"))
+
+    # driver merge: foldLeft (Eq. 7) vs tree — wall time at growing P
+    from repro.core import merge_fold_left, merge_tree
+    import copy
+    for P in [16, 64]:
+        sks = []
+        for p in range(P):
+            s = GKSketch(0.01, head_size=4096, compress_threshold=1024)
+            s.insert_batch(rng.normal(size=20_000))
+            s.flush()
+            sks.append(s)
+        t_fold = timed(lambda: merge_fold_left(
+            [copy.deepcopy(s) for s in sks]), reps=1)
+        t_tree = timed(lambda: merge_tree(
+            [copy.deepcopy(s) for s in sks]), reps=1)
+        csv_rows.append((f"tab4/driver_merge/P={P}",
+                         f"{t_fold * 1e3:.1f}",
+                         f"foldLeft_ms vs tree_ms={t_tree * 1e3:.1f}"))
+    return csv_rows

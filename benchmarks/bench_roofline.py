@@ -1,0 +1,30 @@
+"""Roofline summary bench: reads the dry-run JSON cache and emits the
+per-cell roofline terms (the table EXPERIMENTS.md §Roofline renders)."""
+import glob
+import json
+import os
+
+DRYRUN_DIR = os.path.join(os.path.dirname(os.path.dirname(
+    os.path.abspath(__file__))), "experiments", "dryrun")
+
+
+def run(csv_rows):
+    cells = sorted(glob.glob(os.path.join(DRYRUN_DIR, "*__pod1.json")))
+    if not cells:
+        csv_rows.append(("roofline/NO_DRYRUN_CACHE", "0",
+                         "run python -m repro.launch.dryrun first"))
+        return csv_rows
+    for path in cells:
+        r = json.load(open(path))
+        tag = f"{r['arch']}/{r['shape']}"
+        if r["status"] != "ok":
+            csv_rows.append((f"roofline/{tag}", "0", r.get("reason",
+                                                           r["status"])))
+            continue
+        t = r["roofline"]
+        csv_rows.append((
+            f"roofline/{tag}", f"{t['bound_s'] * 1e6:.0f}",
+            f"dom={t['dominant']} compute={t['compute_s']:.3g}s "
+            f"mem={t['memory_s']:.3g}s coll={t['collective_s']:.3g}s "
+            f"useful={r['useful_flops_ratio']:.2f}"))
+    return csv_rows

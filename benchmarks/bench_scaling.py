@@ -1,0 +1,47 @@
+"""Fig. 1-2: runtime vs n for Full Sort / AFS / Jeffers / GK Sketch /
+GK Select, at fixed partition count.  (CPU container: wall-clock trends +
+structural metrics, not TPU absolutes.)"""
+import time
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.core import (afs_select, approx_quantile, full_sort_quantile,
+                        gk_select, jeffers_select)
+
+ALGOS = {
+    "full_sort": lambda p, q: full_sort_quantile(p, q),
+    "afs": lambda p, q: afs_select(p, q),
+    "jeffers": lambda p, q: jeffers_select(p, q),
+    "gk_sketch": lambda p, q: approx_quantile(p, q, eps=0.01),
+    "gk_select": lambda p, q: gk_select(p, q, eps=0.01),
+    "gk_select_spec": lambda p, q: gk_select(p, q, eps=0.01, speculative=True),
+}
+
+
+def timed(fn, *args, reps=5):
+    out = fn(*args)
+    jax.block_until_ready(out)
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        out = fn(*args)
+    jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / reps * 1e6, out
+
+
+def run(csv_rows):
+    rng = np.random.default_rng(0)
+    P = 16
+    q = 0.5
+    for n in [10 ** 5, 10 ** 6, 10 ** 7]:
+        parts = jnp.asarray(
+            rng.integers(-10 ** 9, 10 ** 9, size=(P, n // P)).astype(np.float32))
+        truth = np.sort(np.asarray(parts).ravel())[
+            max(1, int(np.ceil(q * n))) - 1]
+        for name, fn in ALGOS.items():
+            us, out = timed(fn, parts, q)
+            exact = (float(out) == truth) if name != "gk_sketch" else ""
+            csv_rows.append((f"fig1_2/{name}/n={n:.0e}", f"{us:.0f}",
+                             f"exact={exact}"))
+    return csv_rows

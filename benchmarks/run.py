@@ -1,0 +1,43 @@
+"""Benchmark harness: one module per paper table/figure.
+Prints ``name,us_per_call,derived`` CSV (+ writes bench_results.csv)."""
+import csv
+import io
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(os.path.dirname(
+    os.path.abspath(__file__))), "src"))
+
+from benchmarks import (bench_scaling, bench_distributions, bench_complexity,
+                        bench_rounds, bench_roofline)
+
+MODULES = [
+    ("fig1_2_scaling", bench_scaling),
+    ("fig3_4_distributions", bench_distributions),
+    ("tab4_complexity", bench_complexity),
+    ("tab5_rounds", bench_rounds),
+    ("roofline", bench_roofline),
+]
+
+
+def main() -> None:
+    rows = [("name", "us_per_call", "derived")]
+    for name, mod in MODULES:
+        print(f"== {name} ==", file=sys.stderr)
+        try:
+            mod.run(rows)
+        except Exception as e:  # keep the harness running
+            rows.append((f"{name}/ERROR", "0", f"{type(e).__name__}: {e}"))
+    out = io.StringIO()
+    w = csv.writer(out)
+    for r in rows:
+        w.writerow(r)
+    text = out.getvalue()
+    print(text)
+    with open(os.path.join(os.path.dirname(os.path.abspath(__file__)),
+                           "bench_results.csv"), "w") as f:
+        f.write(text)
+
+
+if __name__ == "__main__":
+    main()

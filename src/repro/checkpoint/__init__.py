@@ -1,0 +1,2 @@
+from .checkpoint import (save_checkpoint, restore_checkpoint, latest_step)
+__all__ = ["save_checkpoint", "restore_checkpoint", "latest_step"]

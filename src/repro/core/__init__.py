@@ -1,0 +1,30 @@
+"""GK Select — exact distributed quantile computation (the paper's core).
+
+Public API:
+  exact_quantile / gk_select / gk_select_multi  — single-process reference
+  full_sort_quantile / psrs_sort / afs_select / jeffers_select /
+  approx_quantile                               — the paper's baseline suite
+  distributed_quantile / gk_select_sharded      — shard_map production path
+  GKSketch / merge_fold_left / merge_tree       — faithful GK sketch layer
+"""
+from .sketch import (GKSketch, merge_fold_left, merge_tree,
+                     local_sample_sketch, query_merged_sketch,
+                     sample_sketch_params)
+from .select import exact_quantile, gk_select, gk_select_multi
+from .baselines import (full_sort_quantile, psrs_sort, afs_select,
+                        jeffers_select, approx_quantile, count_discard_rounds)
+from .distributed import (distributed_quantile, gk_select_sharded,
+                          approx_quantile_sharded, count_discard_sharded,
+                          full_sort_sharded, tree_reduce_candidates)
+from . import local_ops
+
+__all__ = [
+    "GKSketch", "merge_fold_left", "merge_tree", "local_sample_sketch",
+    "query_merged_sketch", "sample_sketch_params",
+    "exact_quantile", "gk_select", "gk_select_multi",
+    "full_sort_quantile", "psrs_sort", "afs_select", "jeffers_select",
+    "approx_quantile", "count_discard_rounds",
+    "distributed_quantile", "gk_select_sharded", "approx_quantile_sharded",
+    "count_discard_sharded", "full_sort_sharded", "tree_reduce_candidates",
+    "local_ops",
+]

@@ -1,0 +1,164 @@
+"""The paper's comparison suite (§IV): Full Sort, Al-Furaih Select (AFS),
+Jeffers Select, and the approximate-only GK Sketch path.
+
+Single-process reference versions over (P, n_i) partitioned arrays, matching
+``repro.core.select``.  Distributed variants live in ``repro.core.distributed``.
+"""
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from . import local_ops
+from .sketch import local_sample_sketch, query_merged_sketch, sample_sketch_params
+
+
+# ---------------------------------------------------------------------------
+# Full sort (Spark orderBy / PSRS)
+# ---------------------------------------------------------------------------
+
+
+@functools.partial(jax.jit, static_argnames=("q",))
+def full_sort_quantile(parts: jax.Array, q: float) -> jax.Array:
+    """Exact quantile by global sort — the O(n log n) + full-shuffle baseline."""
+    n = parts.size
+    k = local_ops.target_rank(n, q)
+    srt = jnp.sort(parts.ravel())
+    return srt[k - 1]
+
+
+@functools.partial(jax.jit, static_argnames=("num_splitter_samples",))
+def psrs_sort(parts: jax.Array, num_splitter_samples: int = 32) -> jax.Array:
+    """Parallel Sort by Regular Sampling, the structure of Spark's range-
+    partitioning sort (§IV-A): per-shard regular samples -> splitters ->
+    bucket every record -> (simulated) shuffle -> per-bucket sort.
+
+    Returns the globally sorted flat array.  In the distributed version the
+    bucket exchange is a capacity-padded all_to_all (the paper's "full
+    shuffle"); here the shuffle is a segment-sort which costs the same O(n)
+    data movement on one device.
+    """
+    P, n_i = parts.shape
+    # 1) regular sampling per shard
+    local_sorted = jnp.sort(parts, axis=1)
+    stride = max(1, n_i // num_splitter_samples)
+    samples = local_sorted[:, ::stride][:, :num_splitter_samples]
+    # 2-3) collect + splitter selection
+    ssorted = jnp.sort(samples.ravel())
+    step = ssorted.size // P
+    splitters = ssorted[step::step][: P - 1]
+    # 4) range partitioning: bucket id per record (the shuffle key)
+    bucket = jnp.searchsorted(splitters, parts.ravel(), side="right")
+    # 5) local sort per bucket — simulated shuffle: stable sort by (bucket, value)
+    order = jnp.lexsort((parts.ravel(), bucket))
+    return parts.ravel()[order]
+
+
+# ---------------------------------------------------------------------------
+# Count-and-discard selection (AFS / Jeffers)
+# ---------------------------------------------------------------------------
+
+
+class _CDState(NamedTuple):
+    lo: jax.Array        # open lower bound of the active interval
+    hi: jax.Array        # open upper bound
+    pivot: jax.Array
+    done: jax.Array
+    answer: jax.Array
+    rounds: jax.Array
+    key: jax.Array
+
+
+def _random_active_candidate(parts: jax.Array, lo, hi, key) -> jax.Array:
+    """Uniformly random element strictly inside (lo, hi) across all shards —
+    the reservoir-sampled pivot of AFS step 3.  Implemented as argmax of
+    random priorities over the active mask (tie-free w.p. 1)."""
+    pri = jax.random.uniform(key, parts.shape)
+    active = (parts > lo) & (parts < hi)
+    pri = jnp.where(active, pri, -1.0)
+    idx = jnp.argmax(pri.ravel())
+    return parts.ravel()[idx]
+
+
+def _count_discard(parts: jax.Array, q: float, *, max_rounds: int,
+                   seed: int) -> tuple[jax.Array, jax.Array]:
+    """Shared body of AFS / Jeffers: O(log n) expected rounds, each round =
+    one global count + pivot update.  Returns (answer, rounds_used)."""
+    n = parts.size
+    k = local_ops.target_rank(n, q)
+    lo, hi = local_ops._sentinels(parts.dtype)
+    key = jax.random.PRNGKey(seed)
+    key, sub = jax.random.split(key)
+    pivot0 = _random_active_candidate(parts, lo, hi, sub)
+
+    def cond(st: _CDState):
+        return (~st.done) & (st.rounds < max_rounds)
+
+    def body(st: _CDState):
+        counts = jax.vmap(lambda x: local_ops.count3(x, st.pivot))(parts).sum(0)
+        lt, eq = counts[0], counts[1]
+        found = (lt < k) & (k <= lt + eq)
+        go_left = k <= lt
+        lo2 = jnp.where(go_left, st.lo, st.pivot)
+        hi2 = jnp.where(go_left, st.pivot, st.hi)
+        key2, sub2 = jax.random.split(st.key)
+        nxt = _random_active_candidate(parts, lo2, hi2, sub2)
+        return _CDState(
+            lo=jnp.where(found, st.lo, lo2),
+            hi=jnp.where(found, st.hi, hi2),
+            pivot=jnp.where(found, st.pivot, nxt),
+            done=st.done | found,
+            answer=jnp.where(found, st.pivot, st.answer),
+            rounds=st.rounds + 1,
+            key=key2,
+        )
+
+    st0 = _CDState(lo=lo, hi=hi, pivot=pivot0,
+                   done=jnp.array(False), answer=pivot0,
+                   rounds=jnp.array(0, jnp.int32), key=key)
+    st = jax.lax.while_loop(cond, body, st0)
+    return st.answer, st.rounds
+
+
+@functools.partial(jax.jit, static_argnames=("q", "max_rounds", "seed"))
+def afs_select(parts: jax.Array, q: float, *, max_rounds: int = 128,
+               seed: int = 0) -> jax.Array:
+    """Al-Furaih Select (serial pivot, parallel count; treeReduce counts)."""
+    ans, _ = _count_discard(parts, q, max_rounds=max_rounds, seed=seed)
+    return ans
+
+
+@functools.partial(jax.jit, static_argnames=("q", "max_rounds", "seed"))
+def jeffers_select(parts: jax.Array, q: float, *, max_rounds: int = 128,
+                   seed: int = 1) -> jax.Array:
+    """Jeffers Select — identical recurrence; counts go driver-direct
+    (collect) instead of treeReduce. Algorithmically the same answer; the
+    distributed variant differs only in its collective choice."""
+    ans, _ = _count_discard(parts, q, max_rounds=max_rounds, seed=seed)
+    return ans
+
+
+def count_discard_rounds(parts: jax.Array, q: float, *, max_rounds: int = 128,
+                         seed: int = 0) -> int:
+    """Instrumented round count for the Table-V benchmark."""
+    _, rounds = _count_discard(parts, q, max_rounds=max_rounds, seed=seed)
+    return int(rounds)
+
+
+# ---------------------------------------------------------------------------
+# Approximate-only baseline (Spark approxQuantile)
+# ---------------------------------------------------------------------------
+
+
+@functools.partial(jax.jit, static_argnames=("q", "eps"))
+def approx_quantile(parts: jax.Array, q: float, *, eps: float = 0.01) -> jax.Array:
+    """GK-Sketch-only path: rank error <= eps*n, one round, no exactness."""
+    P, n_i = parts.shape
+    n = P * n_i
+    k = local_ops.target_rank(n, q)
+    m, s = sample_sketch_params(n, n_i, eps, P)
+    vals, weights = jax.vmap(lambda x: local_sample_sketch(x, m, s))(parts)
+    return query_merged_sketch(vals.ravel(), weights.ravel(), k, P, m)

@@ -1,0 +1,307 @@
+"""Distributed GK Select and baselines under shard_map — the production path.
+
+Spark roles map to SPMD collectives (DESIGN.md §2):
+
+  collect sketches       -> lax.all_gather   (replicated merge, no driver)
+  TorrentBroadcast pivot -> free (pivot computed replicated post-gather)
+  collect counts         -> lax.psum
+  treeReduce candidates  -> log2(P) lax.ppermute butterfly, re-selecting the
+                            cap best at each step (paper's reduceSlices), or a
+                            single capped all_gather (strategy="all_gather")
+
+The faithful variant keeps the paper's 3 data-dependent collective phases and
+its one-sided extraction volume (the side is folded in by sign-negation so
+shapes stay static; see DESIGN.md "Static shapes").  ``speculative=True`` is
+the beyond-paper 2-phase variant: both sides are extracted alongside the
+count, removing the sign dependency, at 2x extraction bytes (still O(eps*n)).
+"""
+from __future__ import annotations
+
+import functools
+import math
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from . import local_ops
+from .sketch import local_sample_sketch, query_merged_sketch, sample_sketch_params
+
+
+# ---------------------------------------------------------------------------
+# collective helpers
+# ---------------------------------------------------------------------------
+
+
+def _axis_size(axis) -> int:
+    return jax.lax.psum(1, axis)
+
+
+def tree_reduce_candidates(buf: jax.Array, axis: str, num_shards: int,
+                           keep_largest: bool) -> jax.Array:
+    """Butterfly (recursive-halving) reduction of a fixed-capacity candidate
+    buffer: log2(P) ppermute steps; every step merges two buffers and keeps
+    the ``cap`` best. All shards end with the globally-best cap candidates.
+
+    The globally best cap values always survive: each step's kept set is a
+    superset of the intersection of the global best with the pair's union.
+    """
+    cap = buf.shape[-1]
+    steps = max(1, int(math.log2(num_shards))) if num_shards > 1 else 0
+    idx = jax.lax.axis_index(axis)
+    for j in range(int(math.log2(num_shards)) if num_shards > 1 else 0):
+        d = 1 << j
+        perm = [(i, i ^ d) for i in range(num_shards)]
+        other = jax.lax.ppermute(buf, axis, perm)
+        both = jnp.concatenate([buf, other], axis=-1)
+        if keep_largest:
+            buf = jax.lax.top_k(both, cap)[0]
+        else:
+            buf = -jax.lax.top_k(-both, cap)[0]
+    return buf
+
+
+def gather_candidates(buf: jax.Array, axis: str) -> jax.Array:
+    """Flat all_gather alternative (Jeffers-style collect): O(cap*P) volume."""
+    return jax.lax.all_gather(buf, axis).reshape(-1)
+
+
+# ---------------------------------------------------------------------------
+# GK Select (shard_map body)
+# ---------------------------------------------------------------------------
+
+
+def gk_select_sharded(x_local: jax.Array, *, q: float, eps: float, axis: str,
+                      num_shards: int, speculative: bool = False,
+                      reduce_strategy: str = "tree",
+                      count3_fn=None, extract_fns=None) -> jax.Array:
+    """Body to run inside shard_map: x_local is this shard's (n_local,) block.
+    Returns the exact quantile, replicated on every shard.
+
+    count3_fn / extract_fns allow kernel injection (Pallas partition_count /
+    block-select) without changing the algorithm.
+    """
+    n_local = x_local.shape[0]
+    n = n_local * num_shards
+    k = jnp.int32(local_ops.target_rank(n, q))
+    count3 = count3_fn or local_ops.count3
+    ex_below = extract_fns[0] if extract_fns else local_ops.extract_below
+    ex_above = extract_fns[1] if extract_fns else local_ops.extract_above
+
+    # ---- Phase 1: local sketch -> all_gather -> replicated merge+query ----
+    m, s = sample_sketch_params(n, n_local, eps, num_shards)
+    vals, weights = local_sample_sketch(x_local, m, s)
+    g_vals = jax.lax.all_gather(vals, axis).reshape(-1)
+    g_wts = jax.lax.all_gather(weights, axis).reshape(-1)
+    pivot = query_merged_sketch(g_vals, g_wts, k, num_shards, m)
+
+    cap = local_ops.candidate_cap(n, eps, n_local)
+
+    if speculative:
+        # ---- Phase 2 (fused): counts psum + two-sided candidate reduce ----
+        counts = jax.lax.psum(count3(x_local, pivot), axis)
+        below = ex_below(x_local, pivot, cap)
+        above = ex_above(x_local, pivot, cap)
+        if reduce_strategy == "tree":
+            below = tree_reduce_candidates(below, axis, num_shards, keep_largest=True)
+            above = tree_reduce_candidates(above, axis, num_shards, keep_largest=False)
+        else:
+            below = gather_candidates(below, axis)
+            above = gather_candidates(above, axis)
+        return local_ops.resolve(pivot, k, counts[0], counts[1], below, above, cap)
+
+    # ---- Phase 2: counts -> Delta_k ----
+    counts = jax.lax.psum(count3(x_local, pivot), axis)
+    lt, eq = counts[0], counts[1]
+    need_left = lt - k + 1
+    need_right = k - (lt + eq)
+    go_left = need_left > 0
+
+    # ---- Phase 3: one-sided extraction (sign-folded for static shapes) ----
+    # For the left side we negate values so "smallest above -pivot" ==
+    # "largest below pivot"; extraction volume stays 1x (paper-faithful).
+    y = jnp.where(go_left, -x_local, x_local)
+    piv = jnp.where(go_left, -pivot, pivot)
+    cand = ex_above(y, piv, cap)           # cap smallest of y above piv
+    if reduce_strategy == "tree":
+        cand = tree_reduce_candidates(cand, axis, num_shards, keep_largest=False)
+    else:
+        cand = gather_candidates(cand, axis)
+    need = jnp.maximum(jnp.where(go_left, need_left, need_right), 1)
+    kth = local_ops.kth_smallest(cand, need, cap)
+    side_val = jnp.where(go_left, -kth, kth)
+    return jnp.where((need_left <= 0) & (need_right <= 0), pivot, side_val)
+
+
+# ---------------------------------------------------------------------------
+# Baselines (shard_map bodies)
+# ---------------------------------------------------------------------------
+
+
+def approx_quantile_sharded(x_local: jax.Array, *, q: float, eps: float,
+                            axis: str, num_shards: int) -> jax.Array:
+    """GK Sketch path only (Spark approxQuantile): 1 collective phase."""
+    n_local = x_local.shape[0]
+    n = n_local * num_shards
+    k = jnp.int32(local_ops.target_rank(n, q))
+    m, s = sample_sketch_params(n, n_local, eps, num_shards)
+    vals, weights = local_sample_sketch(x_local, m, s)
+    g_vals = jax.lax.all_gather(vals, axis).reshape(-1)
+    g_wts = jax.lax.all_gather(weights, axis).reshape(-1)
+    return query_merged_sketch(g_vals, g_wts, k, num_shards, m)
+
+
+def _pmax_pair(priority: jax.Array, value: jax.Array, axis: str):
+    """Value attached to the max priority across the axis (distributed
+    reservoir pick): two pmaxes, tie-free for continuous priorities."""
+    gp = jax.lax.pmax(priority, axis)
+    masked = jnp.where(priority == gp, value, -jnp.inf)
+    return jax.lax.pmax(masked, axis)
+
+
+def count_discard_sharded(x_local: jax.Array, *, q: float, axis: str,
+                          num_shards: int, max_rounds: int = 128, seed: int = 0,
+                          collect_counts: bool = False) -> jax.Array:
+    """AFS (collect_counts=False: psum ~ treeReduce) / Jeffers
+    (collect_counts=True: all_gather ~ collect) — O(log n) rounds, one
+    collective phase per round inside a while_loop."""
+    n_local = x_local.shape[0]
+    n = n_local * num_shards
+    k = local_ops.target_rank(n, q)
+    lo, hi = local_ops._sentinels(x_local.dtype)
+    base = jax.random.fold_in(jax.random.PRNGKey(seed),
+                              jax.lax.axis_index(axis))
+
+    def candidate(lo_, hi_, key):
+        pri = jax.random.uniform(key, x_local.shape)
+        active = (x_local > lo_) & (x_local < hi_)
+        pri = jnp.where(active, pri, -1.0)
+        i = jnp.argmax(pri)
+        return _pmax_pair(pri[i], x_local[i].astype(jnp.float32), axis)
+
+    key0, sub = jax.random.split(base)
+    pivot0 = candidate(lo, hi, sub).astype(x_local.dtype)
+
+    def cond(st):
+        done, rounds = st[3], st[5]
+        return (~done) & (rounds < max_rounds)
+
+    def body(st):
+        lo_, hi_, pivot, done, ans, rounds, key = st
+        c = local_ops.count3(x_local, pivot)
+        if collect_counts:
+            counts = jax.lax.all_gather(c, axis).sum(0)
+        else:
+            counts = jax.lax.psum(c, axis)
+        lt, eq = counts[0], counts[1]
+        found = (lt < k) & (k <= lt + eq)
+        go_left = k <= lt
+        lo2 = jnp.where(go_left, lo_, pivot)
+        hi2 = jnp.where(go_left, pivot, hi_)
+        key2, sub2 = jax.random.split(key)
+        nxt = candidate(lo2, hi2, sub2).astype(x_local.dtype)
+        return (jnp.where(found, lo_, lo2), jnp.where(found, hi_, hi2),
+                jnp.where(found, pivot, nxt), done | found,
+                jnp.where(found, pivot, ans), rounds + 1, key2)
+
+    st0 = (lo, hi, pivot0, jnp.array(False), pivot0,
+           jnp.array(0, jnp.int32), key0)
+    st = jax.lax.while_loop(cond, body, st0)
+    return st[4]
+
+
+def full_sort_sharded(x_local: jax.Array, *, q: float, axis: str,
+                      num_shards: int, capacity_factor: float = 2.0) -> jax.Array:
+    """PSRS / Spark range-partition sort: the O(n) full-shuffle baseline.
+
+    Per-shard regular samples -> replicated splitters -> capacity-padded
+    all_to_all shuffle -> local sort -> rank-addressed exact quantile.
+    Capacity lanes are sentinel-padded; with pathological skew the quantile
+    falls back on the (exact) global-min of dropped lanes being impossible —
+    capacity_factor sizes the buckets, tests use distributions within it.
+    """
+    n_local = x_local.shape[0]
+    n = n_local * num_shards
+    k = local_ops.target_rank(n, q)
+    lo, hi = local_ops._sentinels(x_local.dtype)
+
+    # splitters from regular samples (r per shard)
+    r = min(n_local, 64)
+    xs = jnp.sort(x_local)
+    stride = max(1, n_local // r)
+    samples = xs[::stride][:r]
+    all_samples = jnp.sort(jax.lax.all_gather(samples, axis).reshape(-1))
+    step = all_samples.size // num_shards
+    splitters = all_samples[step::step][: num_shards - 1]
+
+    # bucket & pack into capacity lanes per destination
+    bucket = jnp.searchsorted(splitters, x_local, side="right")
+    cap = int(min(n_local, math.ceil(capacity_factor * n_local / num_shards)))
+    order = jnp.argsort(bucket)
+    xb = x_local[order]
+    bb = bucket[order]
+    # position within bucket
+    start = jnp.searchsorted(bb, jnp.arange(num_shards), side="left")
+    pos = jnp.arange(n_local) - start[bb]
+    valid = pos < cap
+    send = jnp.full((num_shards, cap), hi, x_local.dtype)
+    send = send.at[bb, jnp.where(valid, pos, cap - 1)].set(
+        jnp.where(valid, xb, send[bb, jnp.where(valid, pos, cap - 1)]))
+    # counts actually shipped per destination (for exact global ranks)
+    sent = jax.ops.segment_sum(valid.astype(jnp.int32), bb, num_shards)
+
+    recv = jax.lax.all_to_all(send, axis, split_axis=0, concat_axis=0,
+                              tiled=False)
+    recv = recv.reshape(-1)
+    my_count = jax.lax.psum(sent, axis)[jax.lax.axis_index(axis)]
+    local_sorted = jnp.sort(recv)  # sentinels sort last
+
+    # exact rank bookkeeping: ranks below my bucket
+    counts_all = jax.lax.psum(sent, axis)          # (P,) global per-bucket
+    below = jnp.cumsum(counts_all) - counts_all    # exclusive prefix
+    mine = jax.lax.axis_index(axis)
+    k_local = k - below[mine]
+    have = (k_local >= 1) & (k_local <= counts_all[mine])
+    val = local_sorted[jnp.clip(k_local - 1, 0, recv.size - 1)]
+    contrib = jnp.where(have, val.astype(jnp.float32), -jnp.inf)
+    return jax.lax.pmax(contrib, axis).astype(x_local.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Public API: run over a mesh
+# ---------------------------------------------------------------------------
+
+
+def distributed_quantile(x: jax.Array, q: float, mesh: Mesh, *,
+                         axis: str = "data", eps: float = 0.01,
+                         method: str = "gk_select", speculative: bool = False,
+                         reduce_strategy: str = "tree") -> jax.Array:
+    """Exact (or approximate, method='approx') quantile of a 1-D array sharded
+    over ``axis`` of ``mesh``.  The entry point used by optimizer/serving
+    integrations."""
+    num_shards = mesh.shape[axis]
+    if x.ndim != 1:
+        raise ValueError("distributed_quantile expects a flat array")
+    if x.size % num_shards:
+        raise ValueError(f"size {x.size} % shards {num_shards} != 0 — pad first")
+
+    bodies = {
+        "gk_select": functools.partial(gk_select_sharded, q=q, eps=eps,
+                                       axis=axis, num_shards=num_shards,
+                                       speculative=speculative,
+                                       reduce_strategy=reduce_strategy),
+        "approx": functools.partial(approx_quantile_sharded, q=q, eps=eps,
+                                    axis=axis, num_shards=num_shards),
+        "afs": functools.partial(count_discard_sharded, q=q, axis=axis,
+                                 num_shards=num_shards, collect_counts=False),
+        "jeffers": functools.partial(count_discard_sharded, q=q, axis=axis,
+                                     num_shards=num_shards, collect_counts=True),
+        "full_sort": functools.partial(full_sort_sharded, q=q, axis=axis,
+                                       num_shards=num_shards),
+    }
+    body = bodies[method]
+    spec = P(axis)
+    fn = jax.shard_map(body, mesh=mesh, in_specs=(spec,), out_specs=P(),
+                       check_vma=False)
+    return fn(x)

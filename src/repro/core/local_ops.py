@@ -1,0 +1,109 @@
+"""Per-shard primitives shared by the simulated (vmap) and distributed
+(shard_map) GK Select implementations.
+
+Everything here is static-shape jnp; the Pallas kernels in
+``repro.kernels.ops`` provide drop-in accelerated versions of
+``count3`` and the block-select stage of ``extract_candidates``.
+"""
+from __future__ import annotations
+
+import math
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def _sentinels(dtype):
+    """(lowest, highest) total-order sentinels for a dtype."""
+    if jnp.issubdtype(dtype, jnp.floating):
+        info = jnp.finfo(dtype)
+        return jnp.array(-jnp.inf, dtype), jnp.array(jnp.inf, dtype)
+    info = jnp.iinfo(dtype)
+    return jnp.array(info.min, dtype), jnp.array(info.max, dtype)
+
+
+def count3(x: jax.Array, pivot: jax.Array) -> jax.Array:
+    """Dutch 3-way counts (lt, eq, gt) of one shard vs the pivot.
+
+    Paper Step 4 / ``firstPass``. Linear streaming pass — the Pallas
+    ``partition_count`` kernel implements the tiled HBM->VMEM version.
+    """
+    lt = jnp.sum(x < pivot, dtype=jnp.int32)
+    eq = jnp.sum(x == pivot, dtype=jnp.int32)
+    gt = x.size - lt - eq
+    # int32 counts bound a single job to n < 2^31 elements; jobs larger than
+    # that shard the count over the pod axis before it ever materializes.
+    return jnp.stack([lt, eq, gt])
+
+
+def candidate_cap(n_total: int, eps: float, n_local: int) -> int:
+    """Static per-shard candidate-buffer capacity.
+
+    The sketch guarantees |Delta_k| <= eps*n, so ceil(eps*n)+2 lanes always
+    hold every candidate a shard can contribute (clamped to the shard size).
+    This is the static-shape replacement for Spark's dynamic Delta_k slices
+    (DESIGN.md §2).
+    """
+    return int(min(n_local, math.ceil(eps * n_total) + 2))
+
+
+def extract_above(x: jax.Array, pivot: jax.Array, cap: int) -> jax.Array:
+    """The ``cap`` smallest values strictly above the pivot, ascending;
+    missing lanes are +sentinel. Paper Step 7, Delta_k > 0 branch
+    (Dutch partition + QuickSelect == masked top-k on TPU)."""
+    lo, hi = _sentinels(x.dtype)
+    keys = jnp.where(x > pivot, x, hi)
+    # top_k on negated keys -> k smallest.
+    neg = -keys if jnp.issubdtype(x.dtype, jnp.floating) else -keys
+    vals, _ = jax.lax.top_k(neg, cap)
+    return -vals
+
+
+def extract_below(x: jax.Array, pivot: jax.Array, cap: int) -> jax.Array:
+    """The ``cap`` largest values strictly below the pivot, descending;
+    missing lanes are -sentinel. Paper Step 7, Delta_k < 0 branch."""
+    lo, hi = _sentinels(x.dtype)
+    keys = jnp.where(x < pivot, x, lo)
+    vals, _ = jax.lax.top_k(keys, cap)
+    return vals
+
+
+def kth_smallest(cands: jax.Array, k: jax.Array, cap: int) -> jax.Array:
+    """k-th smallest (1-based, traced k) among candidate lanes; invalid lanes
+    must be +sentinel so they sort last."""
+    srt = jnp.sort(cands.ravel())
+    idx = jnp.clip(k.astype(jnp.int32) - 1, 0, srt.size - 1)
+    return srt[idx]
+
+
+def kth_largest(cands: jax.Array, k: jax.Array, cap: int) -> jax.Array:
+    srt = jnp.sort(cands.ravel())[::-1]
+    idx = jnp.clip(k.astype(jnp.int32) - 1, 0, srt.size - 1)
+    return srt[idx]
+
+
+def target_rank(n: int, q: float) -> int:
+    """1-based target rank k = clamp(ceil(q*n), 1, n).
+
+    Computed host-side in exact integer arithmetic: f32 ceil(q*n) is off by
+    several ranks for n >~ 2^24, which would silently break exactness.
+    """
+    return int(min(n, max(1, math.ceil(q * n))))
+
+
+def resolve(pivot: jax.Array, k: jax.Array, lt: jax.Array, eq: jax.Array,
+            below: jax.Array, above: jax.Array, cap: int) -> jax.Array:
+    """Paper Steps 5+9: pick the exact quantile from the pivot and the merged
+    candidate slices.
+
+    below: merged candidates < pivot, descending-sorted semantics with
+           -sentinel padding (any layout; only rank arithmetic is used).
+    above: merged candidates > pivot with +sentinel padding.
+    """
+    need_left = lt - k + 1          # >0  => answer is need_left-th largest < pivot
+    need_right = k - (lt + eq)      # >0  => answer is need_right-th smallest > pivot
+    left_val = kth_largest(below, jnp.maximum(need_left, 1), cap)
+    right_val = kth_smallest(above, jnp.maximum(need_right, 1), cap)
+    return jnp.where(need_left > 0, left_val,
+                     jnp.where(need_right > 0, right_val, pivot))

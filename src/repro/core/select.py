@@ -1,0 +1,121 @@
+"""GK Select — the paper's exact distributed quantile algorithm.
+
+This module is the *single-process reference*: data is a (P, n_i) array whose
+leading axis plays the role of Spark partitions / mesh shards.  Per-shard work
+is vmapped ``local_ops``; the cross-shard phases are leading-axis reductions.
+``repro.core.distributed`` runs the identical phases under shard_map with real
+collectives.
+
+Round structure (paper §V):
+  Round 1: per-shard sketch -> merge -> approximate pivot
+  Round 2: per-shard 3-way counts -> global sum -> signed rank gap Delta_k
+  Round 3: per-shard candidate extraction -> tree reduce -> exact value
+
+``speculative=True`` is the beyond-paper 2-round variant (DESIGN.md §2):
+candidates on *both* sides of the pivot are extracted in the same pass as the
+counts, removing the sign-dependency between rounds 2 and 3.
+"""
+from __future__ import annotations
+
+import functools
+import math
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+
+from . import local_ops
+from .sketch import local_sample_sketch, query_merged_sketch, sample_sketch_params
+
+
+def _pivot_from_sample_sketch(parts: jax.Array, k: jax.Array, eps: float) -> jax.Array:
+    P, n_i = parts.shape
+    n = P * n_i
+    m, s = sample_sketch_params(n, n_i, eps, P)
+    vals, weights = jax.vmap(lambda x: local_sample_sketch(x, m, s))(parts)
+    return query_merged_sketch(vals.ravel(), weights.ravel(), k, P, m)
+
+
+@functools.partial(jax.jit, static_argnames=("q", "eps", "speculative", "block_select"))
+def gk_select(parts: jax.Array, q: float, *, eps: float = 0.01,
+              speculative: bool = False, block_select: bool = False) -> jax.Array:
+    """Exact q-quantile (k = ceil(q*n), 1-based) of a (P, n_i) partitioned array.
+
+    Exactness does not depend on eps; eps only sizes the sketch and the
+    candidate buffers (|Delta_k| <= eps*n by the sketch guarantee).
+    """
+    P, n_i = parts.shape
+    n = P * n_i
+    k = jnp.int32(local_ops.target_rank(n, q))
+
+    # ---- Round 1: sketch + merged pivot (Steps 1-3) ----
+    pivot = _pivot_from_sample_sketch(parts, k, eps)
+
+    cap = local_ops.candidate_cap(n, eps, n_i)
+
+    if speculative:
+        # ---- Rounds 2+3 fused: count and two-sided extraction in one pass.
+        counts = jax.vmap(lambda x: local_ops.count3(x, pivot))(parts).sum(0)
+        below = jax.vmap(lambda x: local_ops.extract_below(x, pivot, cap))(parts)
+        above = jax.vmap(lambda x: local_ops.extract_above(x, pivot, cap))(parts)
+        lt, eq = counts[0], counts[1]
+        return local_ops.resolve(pivot, k, lt, eq, below, above, cap)
+
+    # ---- Round 2: counts -> Delta_k (Steps 4-6) ----
+    counts = jax.vmap(lambda x: local_ops.count3(x, pivot))(parts).sum(0)
+    lt, eq = counts[0], counts[1]
+    need_left = lt - k + 1
+    need_right = k - (lt + eq)
+
+    # ---- Round 3: one-sided extraction + reduce (Steps 7-9) ----
+    # Paper semantics: only the deficient side is scanned.  Static shapes force
+    # both branches to exist in the graph; lax.cond keeps only one side's
+    # compute live per invocation.
+    def left_branch(_):
+        below = jax.vmap(lambda x: local_ops.extract_below(x, pivot, cap))(parts)
+        return local_ops.kth_largest(below, jnp.maximum(need_left, 1), cap)
+
+    def right_branch(_):
+        above = jax.vmap(lambda x: local_ops.extract_above(x, pivot, cap))(parts)
+        return local_ops.kth_smallest(above, jnp.maximum(need_right, 1), cap)
+
+    side_val = jax.lax.cond(need_left > 0, left_branch, right_branch, operand=None)
+    return jnp.where((need_left <= 0) & (need_right <= 0), pivot, side_val)
+
+
+@functools.partial(jax.jit, static_argnames=("q", "eps", "num_partitions"))
+def exact_quantile(x: jax.Array, q: float, *, eps: float = 0.01,
+                   num_partitions: int = 8) -> jax.Array:
+    """Flat-array convenience wrapper: reshape into P pseudo-partitions and
+    run GK Select. x.size must be divisible by num_partitions (pad upstream)."""
+    n = x.size
+    if n % num_partitions:
+        raise ValueError(f"size {n} not divisible by P={num_partitions}")
+    parts = x.reshape(num_partitions, n // num_partitions)
+    return gk_select(parts, q, eps=eps)
+
+
+@functools.partial(jax.jit, static_argnames=("qs", "eps", "speculative"))
+def gk_select_multi(parts: jax.Array, qs: tuple, *, eps: float = 0.01,
+                    speculative: bool = True) -> jax.Array:
+    """Beyond-paper: Q quantiles in one job (qs is a static tuple of floats).
+    The sketch phase is shared; the count/extract phases vmap over pivots
+    (Spark would run Q separate jobs)."""
+    P, n_i = parts.shape
+    n = P * n_i
+    ks = jnp.array([local_ops.target_rank(n, q) for q in qs], jnp.int32)
+
+    m, s = sample_sketch_params(n, n_i, eps, P)
+    vals, weights = jax.vmap(lambda x: local_sample_sketch(x, m, s))(parts)
+    fv, fw = vals.ravel(), weights.ravel()
+    pivots = jax.vmap(lambda k: query_merged_sketch(fv, fw, k, P, m))(ks)
+
+    cap = local_ops.candidate_cap(n, eps, n_i)
+
+    def one(pivot, k):
+        counts = jax.vmap(lambda x: local_ops.count3(x, pivot))(parts).sum(0)
+        below = jax.vmap(lambda x: local_ops.extract_below(x, pivot, cap))(parts)
+        above = jax.vmap(lambda x: local_ops.extract_above(x, pivot, cap))(parts)
+        return local_ops.resolve(pivot, k, counts[0], counts[1], below, above, cap)
+
+    return jax.vmap(one)(pivots, ks)

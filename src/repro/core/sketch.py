@@ -1,0 +1,288 @@
+"""Quantile sketches: the approximate-summary layer that GK Select pivots on.
+
+Two families, per DESIGN.md §2:
+
+* ``GKSketch`` — faithful Greenwald–Khanna summary with Spark's head-buffer
+  batching (``QuantileSummaries`` semantics: append → flush (sort+merge) →
+  compress at ``2εn``).  Array-based, host-side (numpy): classical GK's
+  pointer-chased tuple list is inherently sequential and does not map to the
+  MXU/VPU; it is kept for paper-faithful benchmarks, invariant tests and the
+  Modified-Spark-GK (geometric buffer) analysis of §IV-E3.
+
+* ``sample sketch`` — the TPU-native mergeable summary (sort + stride-m
+  rank-tagged subsample; the paper's own §IV-D "every fifth percentile"
+  construction).  Pure jnp, fully vectorizable, identical worst-case rank
+  guarantee ``|rank(query(k)) - k| <= eps * n``.
+
+Both are interchangeable as GK Select's pivot oracle.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+# ---------------------------------------------------------------------------
+# TPU-native sample sketch (pure jnp; used inside jit / shard_map)
+# ---------------------------------------------------------------------------
+
+
+def sample_sketch_params(n_total: int, n_local: int, eps: float, num_shards: int
+                         ) -> Tuple[int, int]:
+    """Static (stride m, samples-per-shard s) for a target rank error eps*n.
+
+    m is chosen so that the summed per-shard uncertainty P*m stays <= eps*n
+    (see DESIGN.md §2 for the bound); s = ceil(n_local / m) samples cover the
+    whole shard including a final partial group.
+    """
+    if not 0.0 < eps < 1.0:
+        raise ValueError(f"eps must be in (0,1), got {eps}")
+    m = max(1, int(math.floor(eps * n_total / max(1, num_shards))))
+    m = min(m, n_local)
+    s = int(math.ceil(n_local / m))
+    return m, s
+
+
+def local_sample_sketch(x: jax.Array, m: int, s: int) -> Tuple[jax.Array, jax.Array]:
+    """Sorted stride-m summary of one shard.
+
+    Returns (values (s,), weights (s,)): sample t is the element of local rank
+    min((t+1)*m, n_i); its weight is the number of elements it covers (the gap
+    to the previous sample).  Clamped duplicates at the tail get weight 0 so
+    the shapes stay static.
+    """
+    n_i = x.shape[0]
+    xs = jnp.sort(x)
+    idx = jnp.minimum(jnp.arange(1, s + 1, dtype=jnp.int32) * m - 1, n_i - 1)
+    vals = xs[idx]
+    prev = jnp.concatenate([jnp.full((1,), -1, jnp.int32), idx[:-1]])
+    weights = (idx - prev).astype(jnp.int32)
+    return vals, weights
+
+
+def query_merged_sketch(values: jax.Array, weights: jax.Array, k: jax.Array,
+                        num_shards: int, m: int) -> jax.Array:
+    """Query the concatenated per-shard summaries for the rank-k pivot.
+
+    values/weights are flat (P*s,).  rank(v_t) in [cum_t, cum_t + P*m], so the
+    midpoint estimate cum_t + P*m/2 is within eps*n of the true rank of the
+    chosen sample (DESIGN.md §2).
+    """
+    order = jnp.argsort(values)
+    v = values[order]
+    w = weights[order]
+    cum = jnp.cumsum(w)
+    est = cum.astype(jnp.float32) + (num_shards * m) / 2.0
+    kf = jnp.asarray(k).astype(jnp.float32)
+    t = jnp.argmin(jnp.abs(est - kf))
+    return v[t]
+
+
+# ---------------------------------------------------------------------------
+# Faithful GK sketch (host-side numpy; Spark QuantileSummaries semantics)
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class GKSketch:
+    """Greenwald–Khanna summary with Spark's head-buffer batching.
+
+    Tuples (v_i, g_i, delta_i) maintain the invariant  g_i + delta_i <= 2*eps*n
+    (Eq. 1 of the paper), guaranteeing query rank error <= eps*n.
+
+    ``head_size`` / ``compress_threshold`` follow Spark defaults (50_000 /
+    10_000).  ``adaptive_head=True`` switches to the paper's Modified Spark GK
+    Sketch (§IV-E3): after each flush, B <- ceil(alpha * |S|), restoring the
+    classical O(loglog) per-insert asymptotics.
+    """
+
+    eps: float
+    head_size: int = 50_000
+    compress_threshold: int = 10_000
+    adaptive_head: bool = False
+    alpha: float = 1.5
+
+    def __post_init__(self):
+        self.v = np.empty(0, dtype=np.float64)
+        self.g = np.empty(0, dtype=np.int64)
+        self.delta = np.empty(0, dtype=np.int64)
+        self.n = 0
+        self._buf: list = []
+        self._B = 8 if self.adaptive_head else self.head_size
+        self.flush_count = 0
+        self.compress_count = 0
+
+    # -- ingest ------------------------------------------------------------
+
+    def insert(self, x: float) -> None:
+        self._buf.append(float(x))
+        if len(self._buf) >= self._B:
+            self.flush()
+
+    def insert_batch(self, xs) -> None:
+        xs = np.asarray(xs, dtype=np.float64).ravel()
+        pos = 0
+        while pos < xs.size:
+            take = self._B - len(self._buf)
+            self._buf.extend(xs[pos:pos + take].tolist())
+            pos += take
+            if len(self._buf) >= self._B:
+                self.flush()
+
+    def flush(self) -> None:
+        """Sort the head buffer and merge it into the tuple list (Spark's
+        insertHeadSampled), then compress if above the threshold."""
+        if not self._buf:
+            return
+        self.flush_count += 1
+        batch = np.sort(np.asarray(self._buf, dtype=np.float64))
+        self._buf = []
+        new_n = self.n + batch.size
+        # Inserted tuples: g=1, delta = floor(2*eps*n)-1 interior, 0 at extremes.
+        ins_delta = max(0, int(math.floor(2 * self.eps * new_n)) - 1)
+        pos = np.searchsorted(self.v, batch, side="right")
+        total = self.v.size + batch.size
+        v = np.empty(total)
+        g = np.empty(total, dtype=np.int64)
+        d = np.empty(total, dtype=np.int64)
+        # Stable positions of the new elements in the merged array.
+        new_idx = pos + np.arange(batch.size)
+        mask = np.zeros(total, dtype=bool)
+        mask[new_idx] = True
+        v[mask] = batch
+        g[mask] = 1
+        d[mask] = ins_delta
+        v[~mask] = self.v
+        g[~mask] = self.g
+        d[~mask] = self.delta
+        # Extremes carry delta 0 (exact min/max).
+        if total:
+            d[0] = 0
+            d[-1] = 0
+        self.v, self.g, self.delta, self.n = v, g, d, new_n
+        if self.size > self.compress_threshold or self.adaptive_head:
+            self.compress()
+        if self.adaptive_head:
+            # Modified Spark GK (§IV-E3): B tracks the *compressed* size
+            self._B = max(8, int(math.ceil(self.alpha * max(1, self.size))))
+
+    def compress(self) -> None:
+        """Greedy right-to-left merge of tuples whose combined gap+slack stays
+        under 2*eps*n (Spark compressImmut). Keeps the extremes."""
+        if self.size <= 2:
+            return
+        self.compress_count += 1
+        thresh = math.floor(2 * self.eps * self.n)
+        v, g, d = self.v, self.g, self.delta
+        keep = np.ones(v.size, dtype=bool)
+        gg = g.copy()
+        nxt = v.size - 1  # index of the next *kept* tuple (tail always kept)
+        for i in range(v.size - 2, 0, -1):
+            if gg[i] + gg[nxt] + d[nxt] < thresh:
+                gg[nxt] += gg[i]       # fold i's mass into its kept successor
+                keep[i] = False
+            else:
+                nxt = i
+        self.v, self.g, self.delta = v[keep], gg[keep], d[keep]
+
+    # -- query -------------------------------------------------------------
+
+    @property
+    def size(self) -> int:
+        return int(self.v.size)
+
+    def rank_bounds(self) -> Tuple[np.ndarray, np.ndarray]:
+        rmin = np.cumsum(self.g)
+        rmax = rmin + self.delta
+        return rmin, rmax
+
+    def query_rank(self, k: int) -> float:
+        """Value whose rank is within eps*n of k (k is 1-based)."""
+        if self._buf:
+            self.flush()
+        if self.size == 0:
+            raise ValueError("empty sketch")
+        rmin, rmax = self.rank_bounds()
+        err = np.maximum(k - rmin, rmax - k)
+        return float(self.v[int(np.argmin(err))])
+
+    def query(self, q: float) -> float:
+        if self._buf:
+            self.flush()
+        k = min(self.n, max(1, int(math.ceil(q * self.n))))
+        return self.query_rank(k)
+
+    # -- merge (mergeable-summaries rank-bound merge) ----------------------
+
+    def merge(self, other: "GKSketch") -> "GKSketch":
+        """Merge two summaries; rank errors add (<= eps*(n_a+n_b) when both
+        are eps-summaries). Rank bounds of each tuple against the other sketch
+        are derived by searchsorted (Agarwal et al.'s mergeable-summaries
+        merge, which is what Spark's QuantileSummaries.merge approximates)."""
+        if self._buf:
+            self.flush()
+        if other._buf:
+            other.flush()
+        if other.size == 0:
+            return self
+        if self.size == 0:
+            out = GKSketch(self.eps, self.head_size, self.compress_threshold,
+                           self.adaptive_head, self.alpha)
+            out.v, out.g, out.delta, out.n = (other.v.copy(), other.g.copy(),
+                                              other.delta.copy(), other.n)
+            return out
+
+        def bounds_against(v_mine, sk: "GKSketch"):
+            rmin_o, rmax_o = sk.rank_bounds()
+            j = np.searchsorted(sk.v, v_mine, side="right") - 1
+            lb = np.where(j >= 0, rmin_o[np.clip(j, 0, None)], 0)
+            succ = j + 1
+            ub = np.where(succ < sk.size,
+                          rmax_o[np.clip(succ, None, sk.size - 1)] - 1, sk.n)
+            return lb, ub
+
+        rmin_a, rmax_a = self.rank_bounds()
+        rmin_b, rmax_b = other.rank_bounds()
+        lb_ab, ub_ab = bounds_against(self.v, other)
+        lb_ba, ub_ba = bounds_against(other.v, self)
+        v = np.concatenate([self.v, other.v])
+        rmin = np.concatenate([rmin_a + lb_ab, rmin_b + lb_ba])
+        rmax = np.concatenate([rmax_a + ub_ab, rmax_b + ub_ba])
+        order = np.argsort(v, kind="stable")
+        v, rmin, rmax = v[order], rmin[order], rmax[order]
+        rmin = np.maximum.accumulate(rmin)
+        rmax = np.maximum.accumulate(rmax)
+        g = np.diff(np.concatenate([[0], rmin]))
+        delta = np.maximum(0, rmax - rmin)
+        out = GKSketch(self.eps, self.head_size, self.compress_threshold,
+                       self.adaptive_head, self.alpha)
+        out.v, out.g, out.delta = v, g.astype(np.int64), delta.astype(np.int64)
+        out.n = self.n + other.n
+        out.compress()
+        return out
+
+
+def merge_fold_left(sketches) -> GKSketch:
+    """Spark's driver merge: sequential pairwise foldLeft (Theta(P/eps log) —
+    Eq. 7's asymptotically-worse path)."""
+    out = sketches[0]
+    for s in sketches[1:]:
+        out = out.merge(s)
+    return out
+
+
+def merge_tree(sketches) -> GKSketch:
+    """The paper's recommended driver-side recursive tree reduce."""
+    items = list(sketches)
+    while len(items) > 1:
+        nxt = []
+        for i in range(0, len(items) - 1, 2):
+            nxt.append(items[i].merge(items[i + 1]))
+        if len(items) % 2:
+            nxt.append(items[-1])
+        items = nxt
+    return items[0]

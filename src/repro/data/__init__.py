@@ -1,0 +1,2 @@
+from .pipeline import DataConfig, SyntheticPipeline, StreamStats
+__all__ = ["DataConfig", "SyntheticPipeline", "StreamStats"]

@@ -1,0 +1,4 @@
+from .fault_tolerance import (PreemptionHandler, StragglerMonitor,
+                              ElasticPlan, plan_rescale, StepBarrier)
+__all__ = ["PreemptionHandler", "StragglerMonitor", "ElasticPlan",
+           "plan_rescale", "StepBarrier"]

@@ -1,0 +1,112 @@
+"""Fault tolerance & elasticity: preemption handling, straggler detection,
+elastic rescale planning.
+
+The pieces are deliberately pure/testable logic — on a real cluster the
+launcher wires them to SIGTERM, the coordination service and the scheduler;
+here they are unit-tested state machines the training loop already calls.
+
+Straggler detection is itself a use of the paper: per-step durations stream
+into a GK sketch and a host is flagged when it exceeds the p99 step time by a
+margin — quantile monitoring with bounded memory, no full history kept.
+"""
+from __future__ import annotations
+
+import dataclasses
+import signal
+import threading
+import time
+from typing import Callable, Dict, List, Optional, Tuple
+
+import numpy as np
+
+from repro.core.sketch import GKSketch
+
+
+class PreemptionHandler:
+    """SIGTERM-aware graceful shutdown: flip a flag, let the training loop
+    checkpoint at the next step boundary."""
+
+    def __init__(self, install_signal: bool = False):
+        self._flag = threading.Event()
+        if install_signal:
+            signal.signal(signal.SIGTERM, lambda *_: self._flag.set())
+
+    def preempt(self) -> None:
+        self._flag.set()
+
+    @property
+    def should_stop(self) -> bool:
+        return self._flag.is_set()
+
+
+class StragglerMonitor:
+    """Quantile-based straggler detection over per-host step durations.
+
+    A host is a straggler when its step time exceeds
+    ``factor * p(quantile)`` of the global duration distribution (held in a
+    GK sketch, O(1/eps log eps*n) memory).  ``decide`` returns hosts to
+    flag; the training loop's response is deterministic batch skipping or
+    rescale via ``ElasticPlan``.
+    """
+
+    def __init__(self, quantile: float = 0.99, factor: float = 2.0,
+                 eps: float = 0.01, min_samples: int = 64):
+        self.sketch = GKSketch(eps, head_size=1024, compress_threshold=512)
+        self.quantile = quantile
+        self.factor = factor
+        self.min_samples = min_samples
+
+    def record(self, durations: Dict[str, float]) -> None:
+        self.sketch.insert_batch(np.asarray(list(durations.values())))
+
+    def decide(self, durations: Dict[str, float]) -> List[str]:
+        if self.sketch.n + len(self.sketch._buf) < self.min_samples:
+            return []
+        thr = self.factor * self.sketch.query(self.quantile)
+        return [h for h, d in durations.items() if d > thr]
+
+
+@dataclasses.dataclass(frozen=True)
+class ElasticPlan:
+    """Rescale decision: new mesh shape + whether a restore is required.
+
+    Meshes must keep the model axis intact (TP shards are stateful); the
+    data/pod axes absorb node loss in whole multiples, so the new data
+    parallelism is the largest divisor of the surviving host count that
+    divides the global batch.
+    """
+    data: int
+    model: int
+    pods: int
+    restore_from_checkpoint: bool
+
+
+def plan_rescale(alive_chips: int, model_parallel: int, global_batch: int,
+                 chips_per_pod: int = 256) -> ElasticPlan:
+    if alive_chips < model_parallel:
+        raise RuntimeError("fewer chips than one model-parallel group")
+    groups = alive_chips // model_parallel
+    # largest data-parallel degree that divides the global batch
+    data = groups
+    while data > 1 and global_batch % data:
+        data -= 1
+    pods = max(1, (data * model_parallel) // chips_per_pod)
+    return ElasticPlan(data=data, model=model_parallel, pods=pods,
+                       restore_from_checkpoint=True)
+
+
+class StepBarrier:
+    """Deterministic skip protocol: when any host misses a deadline, all
+    hosts skip the same step (data pipeline is index-addressable, so skipping
+    is consistent by construction)."""
+
+    def __init__(self, deadline_s: float):
+        self.deadline_s = deadline_s
+        self.skipped_steps: List[int] = []
+
+    def check(self, step: int, slowest_host_s: float) -> bool:
+        """Returns True if the step should be skipped cluster-wide."""
+        if slowest_host_s > self.deadline_s:
+            self.skipped_steps.append(step)
+            return True
+        return False

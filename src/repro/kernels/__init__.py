@@ -1,0 +1,12 @@
+"""Pallas TPU kernels for GK Select's executor hot spots.
+
+partition_count — 3-way Dutch counts (Round 2, memory-bound streaming)
+band_count      — open-band counts (radix/threshold selection primitive)
+ops             — jit wrappers, sortable-uint transform, radix_select_kth
+ref             — pure-jnp oracles the kernel tests compare against
+"""
+from . import ops, ref
+from .partition_count import partition_count, LANES
+from .band_count import band_count
+
+__all__ = ["ops", "ref", "partition_count", "band_count", "LANES"]

@@ -1,0 +1,132 @@
+"""jit'd wrappers around the Pallas kernels + the TPU-native QuickSelect.
+
+``count3`` / ``band_count``  — layout + dispatch (kernel vs jnp oracle).
+``radix_select_kth``         — exact k-th smallest with *zero* sorting:
+                               binary search over the sortable-uint transform
+                               of the value domain, one ``partition_count``
+                               pass per bit (<= 32 passes).  This is the
+                               hardware adaptation of the paper's executor
+                               QuickSelect: no in-place partitioning, no
+                               data-dependent branching — just streaming
+                               counts, which is what the VPU is good at.
+
+On this CPU container kernels run under interpret=True; on TPU the same
+pallas_call compiles natively (set interpret=False via REPRO_PALLAS_NATIVE=1).
+"""
+from __future__ import annotations
+
+import functools
+import os
+
+import jax
+import jax.numpy as jnp
+
+from . import ref
+from .partition_count import LANES, partition_count
+from .band_count import band_count as _band_count_kernel
+
+
+def _interpret() -> bool:
+    return os.environ.get("REPRO_PALLAS_NATIVE", "0") != "1"
+
+
+def pad_to_tiles(x: jax.Array) -> jax.Array:
+    """Flat -> (rows, LANES) row-major, padded at the tail (values are masked
+    by n_valid inside the kernels, so the pad content is irrelevant)."""
+    n = x.size
+    rows = max(1, -(-n // LANES))
+    pad = rows * LANES - n
+    if pad:
+        x = jnp.concatenate([x.ravel(), jnp.zeros((pad,), x.dtype)])
+    return x.reshape(rows, LANES)
+
+
+@functools.partial(jax.jit, static_argnames=("use_pallas",))
+def count3(x: jax.Array, pivot: jax.Array, *, use_pallas: bool = True) -> jax.Array:
+    """(lt, eq, gt) of flat x vs pivot — kernel-backed ``local_ops.count3``."""
+    if not use_pallas:
+        return ref.partition_count_ref(x.ravel(), pivot)
+    x2d = pad_to_tiles(x)
+    return partition_count(x2d, jnp.asarray(pivot, x.dtype), n_valid=x.size,
+                           interpret=_interpret())
+
+
+@functools.partial(jax.jit, static_argnames=("use_pallas",))
+def band_count(x: jax.Array, lo: jax.Array, hi: jax.Array, *,
+               use_pallas: bool = True) -> jax.Array:
+    """#{ lo < x < hi } over the flat array."""
+    if not use_pallas:
+        return ref.band_count_ref(x.ravel(), lo, hi)
+    x2d = pad_to_tiles(x)
+    return _band_count_kernel(x2d, jnp.asarray(lo, x.dtype),
+                              jnp.asarray(hi, x.dtype), n_valid=x.size,
+                              interpret=_interpret())
+
+
+# ---------------------------------------------------------------------------
+# sortable-uint transform + radix (bitwise binary-search) selection
+# ---------------------------------------------------------------------------
+
+
+def to_sortable_u32(x: jax.Array) -> jax.Array:
+    """Order-preserving map into uint32 (classic radix-sort float trick)."""
+    if x.dtype == jnp.int32:
+        return x.view(jnp.uint32) ^ jnp.uint32(0x80000000)
+    if x.dtype in (jnp.bfloat16, jnp.float16):
+        x = x.astype(jnp.float32)
+    if x.dtype != jnp.float32:
+        raise TypeError(f"unsupported dtype {x.dtype}")
+    b = x.view(jnp.int32)
+    m = (b >> 31).view(jnp.uint32) | jnp.uint32(0x80000000)
+    return b.view(jnp.uint32) ^ m
+
+
+def from_sortable_u32(u: jax.Array, dtype) -> jax.Array:
+    """Inverse of to_sortable_u32 (f32/int32 targets)."""
+    if dtype == jnp.int32:
+        return (u ^ jnp.uint32(0x80000000)).view(jnp.int32)
+    neg = (u & jnp.uint32(0x80000000)) == 0
+    b = jnp.where(neg, ~u, u ^ jnp.uint32(0x80000000))
+    return b.view(jnp.float32)
+
+
+@functools.partial(jax.jit, static_argnames=("use_pallas",))
+def radix_select_kth(x: jax.Array, k: jax.Array, *,
+                     use_pallas: bool = True) -> jax.Array:
+    """Exact k-th smallest (1-based, traced k) of a flat array, by <=32
+    streaming count passes — no sort, no top_k, no data movement."""
+    orig_dtype = x.dtype
+    u = to_sortable_u32(x.ravel())
+    u2d = pad_to_tiles(u)
+    n = u.size
+    interp = _interpret()
+
+    def count_le(t):
+        if use_pallas:
+            c = partition_count(u2d, t, n_valid=n, interpret=interp)
+        else:
+            c = ref.partition_count_ref(u, t)
+        return c[0] + c[1]
+
+    def body(_, state):
+        lo, hi = state
+        mid = lo + (hi - lo) // jnp.uint32(2)
+        le = count_le(mid)
+        lo2 = jnp.where(le >= k, lo, mid + jnp.uint32(1))
+        hi2 = jnp.where(le >= k, mid, hi)
+        return lo2, hi2
+
+    lo0 = jnp.uint32(0)
+    hi0 = jnp.uint32(0xFFFFFFFF)
+    lo, hi = jax.lax.fori_loop(0, 32, body, (lo0, hi0))
+    out_dtype = jnp.int32 if orig_dtype == jnp.int32 else jnp.float32
+    val = from_sortable_u32(lo, out_dtype)
+    return val.astype(orig_dtype if orig_dtype != jnp.bfloat16 else jnp.bfloat16)
+
+
+def make_count3_fn(use_pallas: bool = True):
+    """count3 injection hook for ``gk_select_sharded`` (same signature as
+    local_ops.count3)."""
+    def fn(x, pivot):
+        return count3(x, pivot, use_pallas=use_pallas)
+    return fn

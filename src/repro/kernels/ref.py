@@ -1,0 +1,47 @@
+"""Pure-jnp oracles for the Pallas kernels.
+
+Each oracle defines the exact semantics a kernel must reproduce; kernel tests
+sweep shapes/dtypes and compare against these (exact equality for counts,
+set-equality for selections).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def partition_count_ref(x: jax.Array, pivot: jax.Array) -> jax.Array:
+    """(lt, eq, gt) counts of a flat array vs pivot — paper ``firstPass``."""
+    lt = jnp.sum(x < pivot, dtype=jnp.int32)
+    eq = jnp.sum(x == pivot, dtype=jnp.int32)
+    gt = jnp.int32(x.size) - lt - eq
+    return jnp.stack([lt, eq, gt])
+
+
+def band_count_ref(x: jax.Array, lo: jax.Array, hi: jax.Array) -> jax.Array:
+    """Count of elements in the open band (lo, hi) — multi-pivot variant."""
+    return jnp.sum((x > lo) & (x < hi), dtype=jnp.int32)
+
+
+def block_topk_ref(x: jax.Array, pivot: jax.Array, cap: int,
+                   largest_below: bool) -> jax.Array:
+    """Per-shard candidate pre-selection oracle.
+
+    largest_below=True : the ``cap`` largest values strictly below the pivot,
+                         descending, padded with the dtype's lowest sentinel.
+    largest_below=False: the ``cap`` smallest values strictly above the pivot,
+                         ascending, padded with the dtype's highest sentinel.
+    """
+    if jnp.issubdtype(x.dtype, jnp.floating):
+        lo = jnp.array(-jnp.inf, x.dtype)
+        hi = jnp.array(jnp.inf, x.dtype)
+    else:
+        info = jnp.iinfo(x.dtype)
+        lo, hi = jnp.array(info.min, x.dtype), jnp.array(info.max, x.dtype)
+    if largest_below:
+        keys = jnp.where(x < pivot, x, lo)
+        vals, _ = jax.lax.top_k(keys, cap)
+        return vals
+    keys = jnp.where(x > pivot, x, hi)
+    vals, _ = jax.lax.top_k(-keys, cap)
+    return -vals

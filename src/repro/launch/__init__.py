@@ -1,0 +1,2 @@
+"""Launch layer: production meshes, sharding rules, step builders, dry-run,
+roofline analysis, train/serve drivers."""

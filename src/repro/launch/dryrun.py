@@ -1,0 +1,138 @@
+import os
+os.environ["XLA_FLAGS"] = (os.environ.get("REPRO_EXTRA_XLA_FLAGS", "") +
+                           " --xla_force_host_platform_device_count=512").strip()
+
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell and
+record memory/cost/collective analysis — the proof that the distribution
+config is coherent on the production meshes (16x16 pod and 2x16x16).
+
+MUST be executed as its own process (the XLA_FLAGS line above runs before any
+other import so the 512 placeholder devices exist before jax initializes).
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --arch all --shape all \
+      --mesh both --out experiments/dryrun [--force]
+"""
+
+import argparse
+import json
+import time
+import traceback
+
+import jax
+
+from repro.configs import REGISTRY
+from repro.launch import roofline as rf
+from repro.launch.mesh import make_production_mesh
+from repro.launch.steps import SHAPES, input_specs, shape_applicable
+
+
+def run_cell(arch: str, shape: str, multi_pod: bool, out_dir: str,
+             force: bool = False, verbose: bool = True) -> dict:
+    tag = f"{arch}__{shape}__{'pod2' if multi_pod else 'pod1'}"
+    os.makedirs(out_dir, exist_ok=True)
+    path = os.path.join(out_dir, tag + ".json")
+    if os.path.exists(path) and not force:
+        with open(path) as f:
+            return json.load(f)
+
+    cfg = REGISTRY[arch]
+    ok, why = shape_applicable(cfg, shape)
+    rec = {"arch": arch, "shape": shape, "mesh": "2x16x16" if multi_pod else "16x16"}
+    if not ok:
+        rec.update(status="skipped", reason=why)
+        with open(path, "w") as f:
+            json.dump(rec, f, indent=1)
+        return rec
+
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    chips = mesh.size
+    t0 = time.time()
+    try:
+        fn, args, in_sh, out_sh, meta = input_specs(cfg, shape, mesh)
+        with mesh:
+            lowered = jax.jit(fn, in_shardings=in_sh,
+                              out_shardings=out_sh).lower(*args)
+            t_lower = time.time() - t0
+            compiled = lowered.compile()
+            t_compile = time.time() - t0 - t_lower
+            mem = compiled.memory_analysis()
+            cost = compiled.cost_analysis()
+            hlo = compiled.as_text()
+        from repro.launch import hlo_analysis
+        ana = hlo_analysis.analyze(hlo)
+        # trip-count-aware per-chip figures (XLA's cost_analysis counts while
+        # bodies once — see hlo_analysis docstring; raw numbers kept below)
+        flops = float(ana["flops"])
+        bytes_acc = float(ana["traffic_bytes"])
+        coll_bytes = float(ana["collective_total_bytes"])
+        terms = rf.roofline_terms(flops, bytes_acc, coll_bytes, chips)
+        mf = rf.model_flops(cfg, meta["tokens_per_step"], meta["kind"])
+        rec.update(
+            status="ok",
+            kind=meta["kind"],
+            tokens_per_step=meta["tokens_per_step"],
+            chips=chips,
+            lower_s=round(t_lower, 1),
+            compile_s=round(t_compile, 1),
+            hlo_flops_per_chip=flops,
+            hlo_bytes_per_chip=bytes_acc,
+            collective_bytes_per_chip=coll_bytes,
+            collective_breakdown=ana["collective_bytes"],
+            collective_counts=ana["collective_counts"],
+            xla_cost_analysis_raw={"flops": float(cost.get("flops", 0.0)),
+                                   "bytes_accessed": float(cost.get("bytes accessed", 0.0))},
+            roofline=terms,
+            model_flops_total=mf,
+            model_flops_per_chip=mf / chips,
+            useful_flops_ratio=(mf / chips) / flops if flops else 0.0,
+            memory_analysis={
+                "argument_bytes": getattr(mem, "argument_size_in_bytes", None),
+                "output_bytes": getattr(mem, "output_size_in_bytes", None),
+                "temp_bytes": getattr(mem, "temp_size_in_bytes", None),
+                "generated_code_bytes": getattr(mem, "generated_code_size_in_bytes", None),
+            },
+        )
+        if verbose:
+            print(f"[ok] {tag}: compile {t_compile:.0f}s  "
+                  f"flops/chip {flops:.3g}  bytes/chip {bytes_acc:.3g}  "
+                  f"coll/chip {coll_bytes:.3g}  dominant {terms['dominant']}")
+    except Exception as e:  # a failing cell is a bug; record it loudly
+        rec.update(status="error", error=f"{type(e).__name__}: {e}",
+                   traceback=traceback.format_exc()[-4000:])
+        if verbose:
+            print(f"[ERROR] {tag}: {type(e).__name__}: {e}")
+    with open(path, "w") as f:
+        json.dump(rec, f, indent=1)
+    return rec
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="all")
+    ap.add_argument("--shape", default="all")
+    ap.add_argument("--mesh", default="both", choices=["pod1", "pod2", "both"])
+    ap.add_argument("--out", default="experiments/dryrun")
+    ap.add_argument("--force", action="store_true")
+    args = ap.parse_args()
+
+    archs = sorted(REGISTRY) if args.arch == "all" else [args.arch]
+    shapes = list(SHAPES) if args.shape == "all" else [args.shape]
+    meshes = {"pod1": [False], "pod2": [True], "both": [False, True]}[args.mesh]
+
+    n_ok = n_skip = n_err = 0
+    for arch in archs:
+        for shape in shapes:
+            for mp in meshes:
+                rec = run_cell(arch, shape, mp, args.out, force=args.force)
+                st = rec["status"]
+                n_ok += st == "ok"
+                n_skip += st == "skipped"
+                n_err += st == "error"
+    print(f"\ndry-run summary: ok={n_ok} skipped={n_skip} error={n_err}")
+    if n_err:
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

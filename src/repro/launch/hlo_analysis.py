@@ -1,0 +1,381 @@
+"""Trip-count-aware HLO cost analyzer.
+
+XLA's HloCostAnalysis counts every while-loop body ONCE — a layer-scanned
+model therefore under-reports flops/bytes/collective-bytes by ~n_layers.
+This module parses the compiled module text, builds the computation call
+graph, extracts static trip counts from while conditions (lax.scan lowers to
+`compare(i, L), direction=LT` against an s32 constant), and accumulates:
+
+  * dot/conv FLOPs            (matmuls dominate the compute term)
+  * HBM traffic estimate      (operands + results of top-level ops per
+                               computation; fusion internals are VMEM-local)
+  * collective operand bytes  (all-gather / all-reduce / reduce-scatter /
+                               all-to-all / collective-permute)
+  * collective op counts
+
+all multiplied through nested while trip counts.  Shapes in a partitioned
+SPMD module are per-device, so every figure is per-chip.
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Dict, List, Optional, Tuple
+
+_DTYPE_BYTES = {
+    "pred": 1, "s4": 1, "u4": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2,
+    "f16": 2, "bf16": 2, "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8,
+    "f64": 8, "c64": 8, "c128": 16, "token": 0,
+}
+
+_SHAPE_RE = re.compile(r"\b([a-z]\d*[a-z]*\d*)\[([0-9,]*)\]")
+_INSTR_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?(%[\w.\-]+)\s*=\s*(\(?.*?\)?)\s*([\w\-]+)\((.*)$")
+_COMP_HDR_RE = re.compile(r"^(?:ENTRY\s+)?(%?[\w.\-]+)\s+\(.*\)\s*->")
+
+COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+               "collective-permute")
+
+_SKIP_TRAFFIC = {
+    "parameter", "constant", "tuple", "get-tuple-element", "bitcast",
+    "after-all", "partition-id", "replica-id", "iota",
+}
+
+
+def _type_bytes(seg: str) -> int:
+    total = 0
+    for m in _SHAPE_RE.finditer(seg):
+        dt, dims = m.group(1), m.group(2)
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def _result_numel_dims(seg: str) -> Tuple[int, List[int]]:
+    m = _SHAPE_RE.search(seg)
+    if not m or m.group(1) not in _DTYPE_BYTES:
+        return 0, []
+    dims = [int(d) for d in m.group(2).split(",")] if m.group(2) else []
+    n = 1
+    for d in dims:
+        n *= d
+    return n, dims
+
+
+@dataclasses.dataclass
+class Instr:
+    name: str
+    result_seg: str
+    op: str
+    rest: str            # operand list + attributes (raw tail of the line)
+
+
+@dataclasses.dataclass
+class Computation:
+    name: str
+    instrs: List[Instr]
+
+
+def parse_module(hlo: str) -> Dict[str, Computation]:
+    comps: Dict[str, Computation] = {}
+    cur: Optional[Computation] = None
+    for raw in hlo.splitlines():
+        line = raw.rstrip()
+        if not line:
+            continue
+        if not line.startswith(" ") and "{" in line and "->" in line:
+            hdr = _COMP_HDR_RE.match(line.strip())
+            if hdr:
+                name = hdr.group(1).lstrip("%")
+                cur = Computation(name, [])
+                comps[name] = cur
+            continue
+        if line.strip() == "}":
+            continue
+        m = _INSTR_RE.match(line)
+        if m and cur is not None:
+            cur.instrs.append(Instr(m.group(1), m.group(2), m.group(3),
+                                    m.group(4)))
+    return comps
+
+
+def _find_attr_comp(rest: str, key: str) -> Optional[str]:
+    m = re.search(key + r"=(%?[\w.\-]+)", rest)
+    return m.group(1).lstrip("%") if m else None
+
+
+def _trip_count(cond: Computation) -> int:
+    """Static trip count: the s32/u32 constant a LT/GT compare bounds the
+    induction variable with (lax.scan/fori lowering). Fallback 1."""
+    consts: Dict[str, int] = {}
+    for ins in cond.instrs:
+        if ins.op == "constant":
+            m = re.match(r"(\d+)\)?", ins.rest)
+            if m and ("s32" in ins.result_seg or "u32" in ins.result_seg):
+                consts[ins.name] = int(m.group(1))
+    best = 1
+    for ins in cond.instrs:
+        if ins.op == "compare":
+            for nm, val in consts.items():
+                if nm in ins.rest:
+                    best = max(best, val)
+    if best == 1 and consts:
+        best = max(consts.values())
+    return best
+
+
+def _group_size(rest: str) -> int:
+    m = re.search(r"replica_groups=\[(\d+),(\d+)\]", rest)
+    if m:
+        return int(m.group(2))
+    m = re.search(r"replica_groups=\{\{([0-9,]+)\}", rest)
+    if m:
+        return len(m.group(1).split(","))
+    return 1
+
+
+@dataclasses.dataclass
+class Costs:
+    flops: float = 0.0
+    traffic: float = 0.0
+    coll_bytes: Dict[str, float] = dataclasses.field(
+        default_factory=lambda: {k: 0.0 for k in COLLECTIVES})
+    coll_count: Dict[str, float] = dataclasses.field(
+        default_factory=lambda: {k: 0.0 for k in COLLECTIVES})
+
+    def add(self, other: "Costs", mult: float = 1.0) -> None:
+        self.flops += other.flops * mult
+        self.traffic += other.traffic * mult
+        for k in COLLECTIVES:
+            self.coll_bytes[k] += other.coll_bytes[k] * mult
+            self.coll_count[k] += other.coll_count[k] * mult
+
+    @property
+    def coll_total(self) -> float:
+        return sum(self.coll_bytes.values())
+
+
+class Analyzer:
+    def __init__(self, hlo: str):
+        self.comps = parse_module(hlo)
+        self.defs: Dict[str, Dict[str, str]] = {}   # comp -> instr -> result seg
+        for cname, comp in self.comps.items():
+            self.defs[cname] = {i.name: i.result_seg for i in comp.instrs}
+        self._memo: Dict[str, Costs] = {}
+        entry = None
+        for cname in self.comps:
+            if cname.startswith("main") or ".main" in cname or cname == "entry":
+                entry = cname
+        if entry is None:       # ENTRY block: pick the largest computation
+            entry = max(self.comps, key=lambda c: len(self.comps[c].instrs))
+        self.entry = entry
+
+    # -- per-instruction costs ---------------------------------------------
+
+    def _dot_flops(self, comp: str, ins: Instr) -> float:
+        numel, _ = _result_numel_dims(ins.result_seg)
+        if not numel:
+            return 0.0
+        # contracted size: lhs operand numel / (batch*free dims in result)
+        ops = re.findall(r"%[\w.\-]+", ins.rest.split(")")[0])
+        if not ops:
+            return 0.0
+        lhs = ops[0].lstrip("%")
+        lhs_seg = self.defs.get(comp, {}).get("%" + lhs) or \
+            self.defs.get(comp, {}).get(lhs)
+        if lhs_seg is None:
+            lhs_seg = self.defs.get(comp, {}).get("%" + lhs.split(".")[0], "")
+        lhs_numel, lhs_dims = _result_numel_dims(lhs_seg or "")
+        m = re.search(r"lhs_contracting_dims=\{([0-9,]*)\}", ins.rest)
+        k = 1
+        if m and lhs_dims:
+            for d in m.group(1).split(","):
+                if d:
+                    k *= lhs_dims[int(d)]
+        return 2.0 * numel * k
+
+    def _conv_flops(self, comp: str, ins: Instr) -> float:
+        numel, _ = _result_numel_dims(ins.result_seg)
+        m = re.search(r"size=([0-9x]+)", ins.rest)
+        ksz = 1
+        if m:
+            for d in m.group(1).split("x"):
+                ksz *= int(d)
+        return 2.0 * numel * ksz
+
+    # -- HBM traffic model ---------------------------------------------------
+    #
+    # Slice-aware: a dynamic-slice/gather of a stacked (L, ...) parameter
+    # reads only the slice, not the stack; a dynamic-update-slice writes only
+    # the update (the buffer is aliased in place).  Whole-tensor reads count
+    # once per fusion regardless of use count.  Fusion internals are
+    # VMEM-local: traffic = slice reads + whole-param reads + written bytes.
+
+    _SLICERS = ("dynamic-slice", "gather")
+
+    def _operands(self, ins: Instr) -> List[str]:
+        head = ins.rest.split("),")[0]
+        return re.findall(r"%[\w.\-]+", head)[:10]
+
+    def _fusion_traffic(self, cname: str) -> float:
+        """Fusion-internal HBM traffic, alias-aware.
+
+        convert/bitcast/copy chains are resolved back to the source
+        parameter: XLA:CPU lowers bf16 dots/updates by materializing f32
+        convert chains around whole buffers (a dynamic-update-slice into
+        convert(param) would otherwise count a full cache copy per loop
+        iteration) — on TPU these are native-dtype, in-place-aliased ops, so
+        the model charges only the slice/update bytes."""
+        comp = self.comps.get(cname)
+        if comp is None:
+            return 0.0, False
+        param_bytes: Dict[str, int] = {}
+        alias: Dict[str, str] = {}       # instr -> root param it renames
+        sliced: set = set()
+        whole: set = set()
+        traffic = 0.0
+        dus_into_param = False
+        defs = self.defs.get(cname, {})
+
+        def root(o):
+            return alias.get(o, o)
+
+        for ins in comp.instrs:
+            if ins.op == "parameter":
+                param_bytes[ins.name] = _type_bytes(ins.result_seg)
+                continue
+            ops = self._operands(ins)
+            if ins.op in ("convert", "bitcast", "copy", "reshape",
+                          "transpose") and ops:
+                r = root(ops[0])
+                if r in param_bytes:
+                    alias[ins.name] = r
+                continue
+            if ins.op in self._SLICERS:
+                traffic += _type_bytes(ins.result_seg)
+                if ops:
+                    sliced.add(root(ops[0]))
+            elif ins.op == "dynamic-update-slice":
+                if len(ops) >= 2:
+                    u = ops[1]
+                    ub = _type_bytes(defs.get(u, ""))
+                    if not ub and root(u) in param_bytes:
+                        ub = 0           # update is an aliased param chain
+                    traffic += 2 * ub
+                if ops:
+                    r = root(ops[0])
+                    sliced.add(r)
+                    if r in param_bytes:
+                        dus_into_param = True
+                        alias[ins.name] = r   # result continues the alias
+            elif ins.op == "select" and len(ops) >= 3:
+                # bounds-check select around an aliased update: pass through
+                for o in ops[1:]:
+                    r = root(o)
+                    if r in param_bytes:
+                        alias[ins.name] = r
+            else:
+                for o in ops:
+                    r = root(o)
+                    if r in param_bytes and r not in sliced:
+                        whole.add(r)
+        traffic += sum(param_bytes[o] for o in whole - sliced)
+        return traffic, dus_into_param
+
+    def _instr_traffic(self, cname: str, ins: Instr) -> float:
+        defs = self.defs.get(cname, {})
+        rb = _type_bytes(ins.result_seg)
+        ops = self._operands(ins)
+        if ins.op in self._SLICERS:
+            return 2.0 * rb
+        if ins.op == "dynamic-update-slice":
+            ub = _type_bytes(defs.get(ops[1], "")) if len(ops) >= 2 else 0
+            return 2.0 * ub
+        if ins.op == "scatter":
+            ub = _type_bytes(defs.get(ops[-1], "")) if ops else 0
+            return 2.0 * (ub or rb)
+        if ins.op == "broadcast":
+            return rb
+        if ins.op == "fusion":
+            sub = _find_attr_comp(ins.rest, "calls")
+            inner, dus_in_place = (self._fusion_traffic(sub)
+                                   if sub in self.comps else (0.0, False))
+            # in-place carry update: the big result buffer is aliased, only
+            # the update bytes (already counted) hit HBM
+            return inner + (0.0 if dus_in_place else rb)
+        ob = sum(_type_bytes(defs.get(o, "")) for o in ops)
+        return rb + ob
+
+    # -- computation traversal ---------------------------------------------
+
+    def cost_of(self, cname: str) -> Costs:
+        if cname in self._memo:
+            return self._memo[cname]
+        self._memo[cname] = Costs()          # cycle guard
+        comp = self.comps.get(cname)
+        if comp is None:
+            return self._memo[cname]
+        c = Costs()
+        for ins in comp.instrs:
+            op = ins.op
+            base = op[:-6] if op.endswith("-start") else op
+            if base in COLLECTIVES:
+                rb = _type_bytes(ins.result_seg)
+                g = _group_size(ins.rest)
+                if base == "all-gather":
+                    b = rb / max(1, g)
+                elif base == "reduce-scatter":
+                    b = rb * g
+                else:
+                    b = rb
+                c.coll_bytes[base] += b
+                c.coll_count[base] += 1
+                continue
+            if op == "while":
+                body = _find_attr_comp(ins.rest, "body")
+                cond = _find_attr_comp(ins.rest, "condition")
+                trips = _trip_count(self.comps[cond]) if cond in self.comps else 1
+                if body in self.comps:
+                    c.add(self.cost_of(body), mult=max(1, trips))
+                continue
+            if op in ("fusion", "call", "custom-call", "map", "reduce",
+                      "reduce-window", "sort", "scatter", "select-and-scatter",
+                      "conditional"):
+                # nested computations: dots inside fusions count as flops;
+                # fusion traffic = own operands+result (internals are local)
+                for key in ("calls", "to_apply", "true_computation",
+                            "false_computation"):
+                    sub = _find_attr_comp(ins.rest, key)
+                    if sub and sub in self.comps:
+                        nested = self.cost_of(sub)
+                        c.flops += nested.flops
+                        c.add(Costs(coll_bytes=dict(nested.coll_bytes),
+                                    coll_count=dict(nested.coll_count)))
+            if op == "dot":
+                c.flops += self._dot_flops(cname, ins)
+            elif op == "convolution":
+                c.flops += self._conv_flops(cname, ins)
+            if op not in _SKIP_TRAFFIC:
+                c.traffic += self._instr_traffic(cname, ins)
+        self._memo[cname] = c
+        return c
+
+    def entry_costs(self) -> Costs:
+        return self.cost_of(self.entry)
+
+
+def analyze(hlo: str) -> Dict:
+    a = Analyzer(hlo)
+    c = a.entry_costs()
+    return {
+        "flops": c.flops,
+        "traffic_bytes": c.traffic,
+        "collective_bytes": {k: v for k, v in c.coll_bytes.items()},
+        "collective_counts": {k: v for k, v in c.coll_count.items()},
+        "collective_total_bytes": c.coll_total,
+    }

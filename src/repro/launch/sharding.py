@@ -1,0 +1,160 @@
+"""Sharding rules: parameter/optimizer/batch/cache PartitionSpecs for the
+production mesh.
+
+Conventions (MaxText-style):
+  "data"  — batch + FSDP axis: parameters and optimizer state shard their
+            d_model-sized dim here (ZeRO); activations shard batch here.
+  "model" — TP axis: heads*dh / d_ff / experts / vocab / ssm d_inner.
+  "pod"   — DCN axis: pure data parallelism + hierarchical reductions.
+
+Rules are trailing-dim patterns keyed by parameter leaf name; leading layer-
+stack axes are padded with None.  Divisibility: all trailing dims in the 10
+assigned configs divide 16 on their sharded axes except some vocabs
+(50280, 256206) — GSPMD pads those (memory analysis accounts for it).
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.models.config import ModelConfig
+
+FSDP = "data"
+TP = "model"
+
+# trailing-dims spec per leaf name (None entries replicate)
+_TRAILING: Dict[str, Tuple] = {
+    "embed": (TP, FSDP),
+    "head": (FSDP, TP),
+    "patch_proj": (None, TP),
+    # attention / dense mlp / mamba projections
+    "wq": (FSDP, TP), "wk": (FSDP, TP), "wv": (FSDP, TP),
+    "wq_c": (FSDP, TP), "wk_c": (FSDP, TP), "wv_c": (FSDP, TP),
+    "w_gate": (FSDP, TP), "w_up": (FSDP, TP), "w_in": (FSDP, TP),
+    "in_proj": (FSDP, TP),
+    "wo": (TP, FSDP), "wo_c": (TP, FSDP), "w_down": (TP, FSDP),
+    "out_proj": (TP, FSDP),
+    # MoE (expert-parallel over TP)
+    "router": (FSDP, None),
+    "we_gate": (TP, FSDP, None), "we_up": (TP, FSDP, None),
+    "we_down": (TP, None, FSDP),
+    # mamba small tensors
+    "conv_w": (None, TP), "conv_b": (TP,), "out_norm": (TP,),
+    "A_log": (None,), "D": (None,), "dt_bias": (None,),
+}
+
+
+def param_spec(path, leaf, mesh: Mesh) -> P:
+    name = None
+    for entry in reversed(path):
+        if isinstance(entry, jax.tree_util.DictKey):
+            name = entry.key
+            break
+    rule = _TRAILING.get(name)
+    if rule is None:
+        return P()                      # norms, biases: replicated
+    pad = leaf.ndim - len(rule)
+    if pad < 0:                         # unstacked variant (shared block)
+        rule = rule[-leaf.ndim:]
+        pad = 0
+    spec = list((None,) * pad + tuple(rule))
+    # pjit argument shardings require exact divisibility (unlike internal
+    # GSPMD constraints): drop axes that don't divide (e.g. vocab 50280 or
+    # 256206 over 16 — those dims stay replicated, the matmul output spec
+    # still distributes the compute)
+    for i, ax in enumerate(spec):
+        if ax is None:
+            continue
+        if leaf.shape[i] % mesh.shape[ax] != 0:
+            spec[i] = None
+    return P(*spec)
+
+
+def param_shardings(mesh: Mesh, params_tree) -> Any:
+    return jax.tree_util.tree_map_with_path(
+        lambda path, leaf: NamedSharding(mesh, param_spec(path, leaf, mesh)),
+        params_tree)
+
+
+def opt_shardings(mesh: Mesh, opt_state_tree, params_tree) -> Any:
+    """Optimizer m/v mirror parameter shardings; step is replicated."""
+    p_sh = param_shardings(mesh, params_tree)
+    return type(opt_state_tree)(
+        step=NamedSharding(mesh, P()),
+        m=p_sh, v=p_sh)
+
+
+def batch_spec(mesh: Mesh, batch_tree, batch_size: int) -> Any:
+    """Batch dim over ("pod","data") when divisible; otherwise (long_500k
+    B=1) the *sequence* dim shards there instead."""
+    baxes = ("pod", "data") if "pod" in mesh.axis_names else ("data",)
+    nb = 1
+    for a in baxes:
+        nb *= mesh.shape[a]
+    shard_batch = batch_size % nb == 0
+
+    def spec(path, leaf):
+        if leaf.ndim == 1:
+            return NamedSharding(mesh, P(baxes if shard_batch else None))
+        if shard_batch:
+            return NamedSharding(mesh, P(baxes, *(None,) * (leaf.ndim - 1)))
+        if leaf.ndim >= 2 and leaf.shape[1] % nb == 0:
+            return NamedSharding(mesh, P(None, baxes,
+                                         *(None,) * (leaf.ndim - 2)))
+        return NamedSharding(mesh, P(*(None,) * leaf.ndim))
+
+    return jax.tree_util.tree_map_with_path(spec, batch_tree)
+
+
+def cache_shardings(mesh: Mesh, cache_tree, cfg: ModelConfig,
+                    batch_size: int, decode: bool = False) -> Any:
+    """KV caches: (L, B, S, KV, dh) -> batch over ("pod","data") when it
+    divides, else sequence.
+
+    Within a batch shard: prefill caches shard dh over "model" (the cache is
+    written blockwise along seq, so a seq-sharded prefill cache would reshard
+    per kv-block); decode caches shard SEQ over "model" (flash-decoding: the
+    one-token attention reduces over seq with small partial-softmax psums,
+    and the per-step write touches one shard — the dh layout instead moved
+    the whole cache through an all-gather every step).
+    SSM states: (L, B, H, hd, N) -> batch, H over "model"."""
+    baxes = ("pod", "data") if "pod" in mesh.axis_names else ("data",)
+    nb = 1
+    for a in baxes:
+        nb *= mesh.shape[a]
+    shard_batch = batch_size % nb == 0
+
+    def spec(path, leaf):
+        names = [e.key for e in path if isinstance(e, jax.tree_util.DictKey)]
+        leaf_name = names[-1] if names else ""
+        nd = leaf.ndim
+        if leaf_name == "pos":          # (L, B, S)
+            if decode and leaf.shape[2] % mesh.shape[TP] == 0:
+                return NamedSharding(
+                    mesh, P(None, baxes if shard_batch else None, TP))
+            return NamedSharding(
+                mesh, P(None, baxes if shard_batch else None, None))
+        if leaf_name in ("k", "v"):     # (L, B, S, KV, dh)
+            seq_ok = leaf.shape[2] % mesh.shape[TP] == 0
+            if decode and seq_ok:
+                if shard_batch:
+                    return NamedSharding(mesh, P(None, baxes, TP, None, None))
+                return NamedSharding(mesh, P(None, None, (*baxes, TP), None,
+                                             None))
+            if shard_batch:
+                return NamedSharding(mesh, P(None, baxes, None, None, TP))
+            return NamedSharding(mesh, P(None, None, baxes, None, TP))
+        if leaf_name == "ssm":          # (.., B, H, hd, N)
+            lead = (None,) * (nd - 4)
+            return NamedSharding(
+                mesh, P(*lead, baxes if shard_batch else None, TP, None, None))
+        if leaf_name == "conv":         # (.., B, K-1, C)
+            lead = (None,) * (nd - 3)
+            return NamedSharding(
+                mesh, P(*lead, baxes if shard_batch else None, None, TP))
+        return NamedSharding(mesh, P(*(None,) * nd))
+
+    return jax.tree_util.tree_map_with_path(spec, cache_tree)

@@ -1,0 +1,152 @@
+"""Step builders + abstract input specs for every (arch x shape) dry-run cell.
+
+Shapes (assignment):
+  train_4k     seq 4,096   global_batch 256   -> train_step
+  prefill_32k  seq 32,768  global_batch 32    -> serve_prefill
+  decode_32k   seq 32,768  global_batch 128   -> serve_step (1 new token)
+  long_500k    seq 524,288 global_batch 1     -> serve_step, sub-quadratic
+                                                 archs only (DESIGN.md §5)
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.models import model
+from repro.models.config import ModelConfig
+from repro.optim import AdamWConfig, adamw_init, adamw_update
+from . import sharding as shd
+from .mesh import batch_axes as mesh_batch_axes
+
+SHAPES: Dict[str, Tuple[int, int]] = {
+    "train_4k": (4096, 256),
+    "prefill_32k": (32768, 32),
+    "decode_32k": (32768, 128),
+    "long_500k": (524288, 1),
+}
+
+
+def shape_applicable(cfg: ModelConfig, shape: str) -> Tuple[bool, str]:
+    if shape == "long_500k" and not cfg.sub_quadratic:
+        return False, "pure full-attention arch: long_500k needs sub-quadratic"
+    return True, ""
+
+
+def mesh_cfg(cfg: ModelConfig, mesh: Mesh, batch: int) -> ModelConfig:
+    """Attach distribution hints (batch/SP axes) for this mesh."""
+    baxes = mesh_batch_axes(mesh)
+    dp = 1
+    for a in baxes:
+        dp *= mesh.shape[a]
+    return dataclasses.replace(cfg, batch_axes=tuple(baxes), sp_axis="model",
+                               dp_size=dp)
+
+
+# ---------------------------------------------------------------------------
+# step functions
+# ---------------------------------------------------------------------------
+
+
+def make_train_step(cfg: ModelConfig, opt_cfg: AdamWConfig):
+    def train_step(params, opt_state, batch):
+        (loss, metrics), grads = jax.value_and_grad(
+            model.forward_loss, has_aux=True)(params, batch, cfg)
+        new_params, new_opt, opt_metrics = adamw_update(
+            grads, opt_state, params, opt_cfg)
+        out = {"loss": loss, **{k: v for k, v in metrics.items()},
+               **opt_metrics}
+        return new_params, new_opt, out
+    return train_step
+
+
+def make_prefill_step(cfg: ModelConfig, cache_len: int):
+    def prefill_step(params, batch):
+        return model.prefill(params, batch, cfg, cache_len=cache_len)
+    return prefill_step
+
+
+def make_decode_step(cfg: ModelConfig):
+    def serve_step(params, token, cache, cache_len):
+        return model.decode_step(params, token, cache, cache_len, cfg)
+    return serve_step
+
+
+# ---------------------------------------------------------------------------
+# abstract inputs (ShapeDtypeStruct only — never allocated)
+# ---------------------------------------------------------------------------
+
+
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(tuple(shape), jnp.dtype(dtype))
+
+
+def batch_abstract(cfg: ModelConfig, B: int, S: int,
+                   with_labels: bool = True) -> Dict[str, Any]:
+    b = {"tokens": _sds((B, S), jnp.int32)}
+    if with_labels:
+        b["labels"] = _sds((B, S), jnp.int32)
+    if cfg.modality == "vision_stub":
+        b["patch_embeds"] = _sds((B, cfg.frontend_len, cfg.d_model), jnp.float32)
+    if cfg.is_encdec:
+        b["frames"] = _sds((B, max(1, S // cfg.enc_seq_divisor), cfg.d_model),
+                           jnp.float32)
+    return b
+
+
+def input_specs(arch_cfg: ModelConfig, shape: str, mesh: Mesh,
+                opt_cfg: Optional[AdamWConfig] = None):
+    """Returns (fn, args_abstract, in_shardings, out_shardings, meta) for one
+    dry-run cell — jit(fn, in_shardings, out_shardings).lower(*args).compile()
+    is the whole contract."""
+    S, B = SHAPES[shape]
+    cfg = mesh_cfg(arch_cfg, mesh, B)
+    opt_cfg = opt_cfg or AdamWConfig(quantile_clip=0.999)
+
+    params_abs = model.abstract_params(cfg)
+    p_shard = shd.param_shardings(mesh, params_abs)
+
+    if shape == "train_4k":
+        opt_abs = jax.eval_shape(adamw_init, params_abs)
+        o_shard = shd.opt_shardings(mesh, opt_abs, params_abs)
+        batch_abs = batch_abstract(cfg, B, S)
+        b_shard = shd.batch_spec(mesh, batch_abs, B)
+        fn = make_train_step(cfg, opt_cfg)
+        return (fn, (params_abs, opt_abs, batch_abs),
+                (p_shard, o_shard, b_shard),
+                (p_shard, o_shard, None),
+                {"cfg": cfg, "tokens_per_step": B * S, "kind": "train"})
+
+    if shape == "prefill_32k":
+        batch_abs = batch_abstract(cfg, B, S, with_labels=False)
+        b_shard = shd.batch_spec(mesh, batch_abs, B)
+        fn = make_prefill_step(cfg, cache_len=S)
+        cache_abs = jax.eval_shape(
+            functools.partial(model.init_cache, cfg, B, S,
+                              enc_len=(S // cfg.enc_seq_divisor
+                                       if cfg.is_encdec else 0)))
+        c_shard = shd.cache_shardings(mesh, cache_abs, cfg, B)
+        return (fn, (params_abs, batch_abs), (p_shard, b_shard),
+                (None, c_shard),
+                {"cfg": cfg, "tokens_per_step": B * S, "kind": "prefill"})
+
+    # decode shapes: one new token against a cache of size S
+    enc_len = S // cfg.enc_seq_divisor if cfg.is_encdec else 0
+    cache_abs = jax.eval_shape(
+        functools.partial(model.init_cache, cfg, B, S, enc_len=enc_len))
+    c_shard = shd.cache_shardings(mesh, cache_abs, cfg, B, decode=True)
+    token_abs = _sds((B, 1), jnp.int32)
+    clen_abs = _sds((B,), jnp.int32)
+    baxes = mesh_batch_axes(mesh)
+    nb = cfg.dp_size
+    tok_shard = NamedSharding(mesh, P(baxes if B % nb == 0 else None, None))
+    clen_shard = NamedSharding(mesh, P(baxes if B % nb == 0 else None))
+    fn = make_decode_step(cfg)
+    return (fn, (params_abs, token_abs, cache_abs, clen_abs),
+            (p_shard, tok_shard, c_shard, clen_shard),
+            (None, c_shard),
+            {"cfg": cfg, "tokens_per_step": B, "kind": "decode"})

@@ -1,0 +1,5 @@
+"""Model stack: config, layers, MoE, Mamba2 SSD, assembly."""
+from .config import ModelConfig
+from . import layers, moe, ssm, model
+
+__all__ = ["ModelConfig", "layers", "moe", "ssm", "model"]

@@ -1,0 +1,437 @@
+"""Core neural layers: norms, rotary embeddings (RoPE / M-RoPE), grouped-query
+attention with online-softmax chunking (flash-style in pure JAX), and MLPs.
+
+All layers are functional: params are plain dicts of jnp arrays; layer-stacked
+variants carry a leading (L, ...) axis and are driven by lax.scan in model.py
+so HLO size is O(1) in depth.
+"""
+from __future__ import annotations
+
+import functools
+import math
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .config import ModelConfig
+
+NEG_INF = -1e30
+
+
+def shard_act(x: jax.Array, cfg: ModelConfig) -> jax.Array:
+    """Residual-stream constraint between blocks.  No-op off-mesh.
+
+    Dense/attention families: sequence-parallel, (B, S, D) ->
+    P(batch, sp_axis, None) — Megatron-SP, norms/MLP input stays sharded.
+
+    SSM/hybrid families: feature-parallel, P(batch, None, sp_axis) — the SSD
+    chunk scan slices the sequence axis every step, so a seq-sharded stream
+    would reshard once per chunk per layer (measured: ~9k collective-permutes
+    per prefill); keeping D sharded makes in_proj a row-parallel matmul
+    instead.  Skips batch sharding when B doesn't divide (long_500k B=1).
+    """
+    if not cfg.batch_axes and not cfg.sp_axis:
+        return x
+    if x.ndim != 3:
+        return x
+    from jax.sharding import PartitionSpec as P
+    b_spec = cfg.batch_axes if (cfg.batch_axes and
+                                x.shape[0] % cfg.dp_size == 0) else None
+    if cfg.family in ("ssm", "hybrid"):
+        d_spec = cfg.sp_axis if (cfg.sp_axis and x.shape[2] % 16 == 0) else None
+        return jax.lax.with_sharding_constraint(x, P(b_spec, None, d_spec))
+    s_spec = cfg.sp_axis if (cfg.sp_axis and x.shape[1] % 16 == 0) else None
+    return jax.lax.with_sharding_constraint(x, P(b_spec, s_spec, None))
+
+
+# ---------------------------------------------------------------------------
+# norms
+# ---------------------------------------------------------------------------
+
+
+def rmsnorm(x: jax.Array, w: jax.Array, eps: float = 1e-6) -> jax.Array:
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    x = x * jax.lax.rsqrt(jnp.mean(x * x, axis=-1, keepdims=True) + eps)
+    return (x * w.astype(jnp.float32)).astype(dt)
+
+
+def layernorm(x: jax.Array, w: jax.Array, b: jax.Array,
+              eps: float = 1e-5) -> jax.Array:
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.mean(jnp.square(x - mu), axis=-1, keepdims=True)
+    x = (x - mu) * jax.lax.rsqrt(var + eps)
+    return (x * w.astype(jnp.float32) + b.astype(jnp.float32)).astype(dt)
+
+
+def norm(x: jax.Array, p: dict, cfg: ModelConfig, key: str) -> jax.Array:
+    if cfg.use_layernorm:
+        return layernorm(x, p[key], p[key + "_b"])
+    return rmsnorm(x, p[key])
+
+
+# ---------------------------------------------------------------------------
+# rotary position embeddings
+# ---------------------------------------------------------------------------
+
+
+def rope_freqs(d_head: int, theta: float) -> jax.Array:
+    return 1.0 / (theta ** (jnp.arange(0, d_head, 2, dtype=jnp.float32) / d_head))
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """x: (B, S, H, dh); positions: (B, S) int32."""
+    dh = x.shape[-1]
+    inv = rope_freqs(dh, theta)                        # (dh/2,)
+    ang = positions[..., None].astype(jnp.float32) * inv   # (B, S, dh/2)
+    cos = jnp.cos(ang)[:, :, None, :]
+    sin = jnp.sin(ang)[:, :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+def apply_mrope(x: jax.Array, positions3: jax.Array, theta: float,
+                sections: Tuple[int, ...]) -> jax.Array:
+    """Qwen2-VL M-RoPE: the dh/2 frequency slots are partitioned into
+    (temporal, height, width) sections, each rotated by its own position
+    stream.  positions3: (3, B, S) int32 (equal streams for pure text)."""
+    dh = x.shape[-1]
+    inv = rope_freqs(dh, theta)                        # (dh/2,)
+    sec = jnp.concatenate([jnp.full((s,), i, jnp.int32)
+                           for i, s in enumerate(sections)])
+    assert sec.shape[0] == dh // 2, (sections, dh)
+    # pick the position stream per frequency slot
+    pos = positions3.astype(jnp.float32)               # (3, B, S)
+    pos_per_slot = pos[sec]                            # (dh/2, B, S)
+    ang = jnp.moveaxis(pos_per_slot, 0, -1) * inv      # (B, S, dh/2)
+    cos = jnp.cos(ang)[:, :, None, :]
+    sin = jnp.sin(ang)[:, :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# grouped-query attention with online-softmax chunking
+# ---------------------------------------------------------------------------
+
+
+def _mask_bias(pos_q, pos_k, kv_len, causal: bool, window: int):
+    """(…, Sq, Sk) additive bias: 0 where attendable, NEG_INF elsewhere."""
+    pq = pos_q[:, :, None]         # (B, Sq, 1)
+    pk = pos_k[:, None, :]         # (B, 1, Sk)
+    ok = pk < kv_len[:, None, None] if kv_len is not None else (pk == pk)
+    if causal:
+        ok = ok & (pk <= pq)
+    if window:
+        ok = ok & (pq - pk < window)
+    return jnp.where(ok, 0.0, NEG_INF)
+
+
+def shard_heads(t: jax.Array, cfg: ModelConfig) -> jax.Array:
+    """Tensor-parallel constraint on (B, S, H, dh): heads over the TP axis
+    (GSPMD pads non-divisible head counts — e.g. 56 or 12 over 16)."""
+    if not cfg.sp_axis:
+        return t
+    from jax.sharding import PartitionSpec as P
+    b_spec = cfg.batch_axes if (cfg.batch_axes and
+                                t.shape[0] % cfg.dp_size == 0) else None
+    return jax.lax.with_sharding_constraint(
+        t, P(b_spec, None, cfg.sp_axis, None))
+
+
+def attention(q: jax.Array, k: jax.Array, v: jax.Array,
+              pos_q: jax.Array, pos_k: jax.Array, *,
+              causal: bool = True, window: int = 0,
+              kv_len: Optional[jax.Array] = None,
+              q_block: int = 512, kv_block: int = 1024,
+              cfg: Optional[ModelConfig] = None) -> jax.Array:
+    """GQA attention, flash-style: O(block^2) live memory via lax.scan over
+    query and key blocks with an online-softmax accumulator.
+
+    GQA K/V are expanded to the full head count up front (flat-head einsums
+    keep the "model"-axis head sharding intact through the whole kernel —
+    grouped (KV, G) reshapes defeat GSPMD propagation and silently replicate
+    attention across the TP axis).
+
+    q: (B, Sq, NH, dh); k, v: (B, Sk, KV, dh); pos_*: (B, S*) absolute
+    positions (causal/window masks + decode-cache masking via kv_len).
+    Returns (B, Sq, NH, dh).
+    """
+    B, Sq, NH, dh = q.shape
+    _, Sk, KV, _ = k.shape
+    G = NH // KV
+
+    if Sq == 1:
+        # decode: flash-decoding layout.  NO head expansion and NO f32 cast
+        # of the cache (the expanded-f32 copy was the measured collective hot
+        # spot: ~1GB/layer moved per decoded token).  Grouped bf16 einsums
+        # with f32 MXU accumulation reduce over the seq-sharded cache; the
+        # softmax/PV combine psums are (B, KV, G) sized — negligible.
+        qg = (q.astype(jnp.bfloat16) * dh ** -0.5).reshape(B, Sq, KV, G, dh)
+        s = jnp.einsum("bqkgd,btkd->bkgqt", qg, k.astype(jnp.bfloat16),
+                       preferred_element_type=jnp.float32)
+        bias = _mask_bias(pos_q, pos_k, kv_len, causal, window)
+        s = s + bias[:, None, None]
+        m = s.max(-1, keepdims=True)
+        p = jnp.exp(s - m)
+        l = p.sum(-1, keepdims=True)
+        o = jnp.einsum("bkgqt,btkd->bqkgd", (p / l).astype(jnp.bfloat16),
+                       v.astype(jnp.bfloat16),
+                       preferred_element_type=jnp.float32)
+        return o.reshape(B, Sq, NH, dh).astype(q.dtype)
+
+    if G > 1:
+        k = jnp.repeat(k, G, axis=2)
+        v = jnp.repeat(v, G, axis=2)
+    if cfg is not None:
+        q = shard_heads(q, cfg)
+        k = shard_heads(k, cfg)
+        v = shard_heads(v, cfg)
+
+    if Sq * Sk <= q_block * kv_block * 2:
+        # small problem (smoke tests): direct path
+        qs = q.astype(jnp.float32) * dh ** -0.5
+        s = jnp.einsum("bqhd,bthd->bhqt", qs, k.astype(jnp.float32))
+        bias = _mask_bias(pos_q, pos_k, kv_len, causal, window)
+        s = s + bias[:, None]
+        p = jax.nn.softmax(s, axis=-1)
+        o = jnp.einsum("bhqt,bthd->bqhd", p, v.astype(jnp.float32))
+        return o.astype(q.dtype)
+
+    assert kv_len is None, "chunked path masks via position sentinels"
+    return _flash(q, k, v, pos_q, pos_k, causal, window, q_block, kv_block)
+
+
+# ---------------------------------------------------------------------------
+# flash attention with a flash backward (custom_vjp)
+#
+# Without this, JAX linearizes the nested block scans and STORES every
+# (B, H, q_block, kv_block) probability matrix for the backward — measured
+# ~2 GB/layer of stacked f32 residuals on train_4k, defeating the point of
+# the online softmax.  The custom backward recomputes P blockwise from the
+# saved (q, k, v, out, lse), exactly like the FlashAttention-2 kernel.
+# ---------------------------------------------------------------------------
+
+
+def _blockify(q, k, v, pos_q, pos_k, q_block, kv_block):
+    B, Sq, NH, dh = q.shape
+    Sk = k.shape[1]
+    nq = -(-Sq // q_block)
+    nk = -(-Sk // kv_block)
+    qs = jnp.pad(q.astype(jnp.float32), ((0, 0), (0, nq * q_block - Sq),
+                                         (0, 0), (0, 0)))
+    pq = jnp.pad(pos_q, ((0, 0), (0, nq * q_block - Sq)), constant_values=-1)
+    kp = jnp.pad(k.astype(jnp.float32), ((0, 0), (0, nk * kv_block - Sk),
+                                         (0, 0), (0, 0)))
+    vp = jnp.pad(v.astype(jnp.float32), ((0, 0), (0, nk * kv_block - Sk),
+                                         (0, 0), (0, 0)))
+    pk = jnp.pad(pos_k, ((0, 0), (0, nk * kv_block - Sk)),
+                 constant_values=2 ** 30)
+    qb = qs.reshape(B, nq, q_block, NH, dh).transpose(1, 0, 2, 3, 4)
+    pqb = pq.reshape(B, nq, q_block).transpose(1, 0, 2)
+    kb = kp.reshape(B, nk, kv_block, NH, dh).transpose(1, 0, 2, 3, 4)
+    vb = vp.reshape(B, nk, kv_block, NH, dh).transpose(1, 0, 2, 3, 4)
+    pkb = pk.reshape(B, nk, kv_block).transpose(1, 0, 2)
+    return qb, kb, vb, pqb, pkb, nq, nk
+
+
+def _flash_fwd_impl(q, k, v, pos_q, pos_k, causal, window, q_block, kv_block):
+    B, Sq, NH, dh = q.shape
+    scale = dh ** -0.5
+    qb_, kb, vb, pqb, pkb, nq, nk = _blockify(q, k, v, pos_q, pos_k,
+                                              q_block, kv_block)
+
+    def q_step(_, q_in):
+        qb, pqb_i = q_in
+
+        def kv_step(carry, kv_in):
+            m, l, acc = carry
+            kt, vt, pkt = kv_in
+            s = jnp.einsum("bqhd,bthd->bhqt", qb * scale, kt)
+            s = s + _mask_bias(pqb_i, pkt, None, causal, window)[:, None]
+            m2 = jnp.maximum(m, s.max(-1))
+            corr = jnp.exp(m - m2)
+            p = jnp.exp(s - m2[..., None])
+            l2 = l * corr + p.sum(-1)
+            acc2 = acc * corr[..., None] + jnp.einsum("bhqt,bthd->bhqd", p, vt)
+            return (m2, l2, acc2), None
+
+        m0 = jnp.full((B, NH, q_block), NEG_INF, jnp.float32)
+        l0 = jnp.zeros((B, NH, q_block), jnp.float32)
+        a0 = jnp.zeros((B, NH, q_block, dh), jnp.float32)
+        (m, l, acc), _ = jax.lax.scan(kv_step, (m0, l0, a0), (kb, vb, pkb))
+        out = acc / jnp.maximum(l[..., None], 1e-30)
+        lse = m + jnp.log(jnp.maximum(l, 1e-30))          # (B, NH, qb)
+        return None, (out.transpose(0, 2, 1, 3), lse)
+
+    _, (outs, lses) = jax.lax.scan(q_step, None, (qb_, pqb))
+    out = outs.transpose(1, 0, 2, 3, 4).reshape(B, nq * q_block, NH, dh)
+    lse = lses.transpose(1, 2, 0, 3).reshape(B, NH, nq * q_block)
+    return out[:, :Sq], lse[:, :, :Sq]
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(5, 6, 7, 8))
+def _flash(q, k, v, pos_q, pos_k, causal, window, q_block, kv_block):
+    out, _ = _flash_fwd_impl(q, k, v, pos_q, pos_k, causal, window,
+                             q_block, kv_block)
+    return out.astype(q.dtype)
+
+
+def _flash_fwd(q, k, v, pos_q, pos_k, causal, window, q_block, kv_block):
+    out, lse = _flash_fwd_impl(q, k, v, pos_q, pos_k, causal, window,
+                               q_block, kv_block)
+    return out.astype(q.dtype), (q, k, v, pos_q, pos_k, out, lse)
+
+
+def _flash_bwd(causal, window, q_block, kv_block, res, dout):
+    q, k, v, pos_q, pos_k, out, lse = res
+    B, Sq, NH, dh = q.shape
+    Sk = k.shape[1]
+    scale = dh ** -0.5
+    qb_, kb, vb, pqb, pkb, nq, nk = _blockify(q, k, v, pos_q, pos_k,
+                                              q_block, kv_block)
+    do = jnp.pad(dout.astype(jnp.float32),
+                 ((0, 0), (0, nq * q_block - Sq), (0, 0), (0, 0)))
+    dob = do.reshape(B, nq, q_block, NH, dh).transpose(1, 0, 2, 3, 4)
+    lsep = jnp.pad(lse, ((0, 0), (0, 0), (0, nq * q_block - Sq)))
+    lseb = lsep.reshape(B, NH, nq, q_block).transpose(2, 0, 1, 3)
+    # D_i = rowsum(dout * out)  (B, NH, Sq)
+    Dfull = jnp.einsum("bqhd,bqhd->bhq", dout.astype(jnp.float32),
+                       out.astype(jnp.float32))
+    Dp = jnp.pad(Dfull, ((0, 0), (0, 0), (0, nq * q_block - Sq)))
+    Db = Dp.reshape(B, NH, nq, q_block).transpose(2, 0, 1, 3)
+
+    def recompute_p(qb, pqb_i, lse_i, kt, pkt):
+        s = jnp.einsum("bqhd,bthd->bhqt", qb * scale, kt)
+        s = s + _mask_bias(pqb_i, pkt, None, causal, window)[:, None]
+        return jnp.exp(s - lse_i[..., None])              # (B, NH, qb, kb)
+
+    # pass 1: dQ — scan q blocks, reduce over kv blocks
+    def dq_step(_, q_in):
+        qb, pqb_i, lse_i, do_i, D_i = q_in
+
+        def kv_step(acc, kv_in):
+            kt, vt, pkt = kv_in
+            p = recompute_p(qb, pqb_i, lse_i, kt, pkt)
+            dp = jnp.einsum("bqhd,bthd->bhqt", do_i, vt)
+            ds = p * (dp - D_i[..., None])
+            return acc + jnp.einsum("bhqt,bthd->bqhd", ds, kt) * scale, None
+
+        acc0 = jnp.zeros((B, q_block, NH, dh), jnp.float32)
+        dq_i, _ = jax.lax.scan(kv_step, acc0, (kb, vb, pkb))
+        return None, dq_i
+
+    _, dqs = jax.lax.scan(dq_step, None, (qb_, pqb, lseb, dob, Db))
+    dq = dqs.transpose(1, 0, 2, 3, 4).reshape(B, nq * q_block, NH, dh)[:, :Sq]
+
+    # pass 2: dK, dV — scan kv blocks, reduce over q blocks
+    def dkv_step(_, kv_in):
+        kt, vt, pkt = kv_in
+
+        def q_red(acc, q_in):
+            dk_a, dv_a = acc
+            qb, pqb_i, lse_i, do_i, D_i = q_in
+            p = recompute_p(qb, pqb_i, lse_i, kt, pkt)
+            dv_a = dv_a + jnp.einsum("bhqt,bqhd->bthd", p, do_i)
+            dp = jnp.einsum("bqhd,bthd->bhqt", do_i, vt)
+            ds = p * (dp - D_i[..., None])
+            dk_a = dk_a + jnp.einsum("bhqt,bqhd->bthd", ds, qb) * scale
+            return (dk_a, dv_a), None
+
+        z = jnp.zeros((B, kv_block, NH, dh), jnp.float32)
+        (dk_i, dv_i), _ = jax.lax.scan(q_red, (z, z), (qb_, pqb, lseb, dob, Db))
+        return None, (dk_i, dv_i)
+
+    _, (dks, dvs) = jax.lax.scan(dkv_step, None, (kb, vb, pkb))
+    dk = dks.transpose(1, 0, 2, 3, 4).reshape(B, nk * kv_block, NH, dh)[:, :Sk]
+    dv = dvs.transpose(1, 0, 2, 3, 4).reshape(B, nk * kv_block, NH, dh)[:, :Sk]
+
+    f0 = jax.dtypes.float0
+    return (dq.astype(q.dtype), dk.astype(k.dtype), dv.astype(v.dtype),
+            np.zeros(pos_q.shape, f0), np.zeros(pos_k.shape, f0))
+
+
+_flash.defvjp(_flash_fwd, _flash_bwd)
+
+
+# ---------------------------------------------------------------------------
+# attention block (projection + rope + attention + output)
+# ---------------------------------------------------------------------------
+
+
+def attn_block(p: dict, x: jax.Array, cfg: ModelConfig, *,
+               positions: jax.Array, positions3: Optional[jax.Array] = None,
+               cache: Optional[dict] = None, kv_len: Optional[jax.Array] = None,
+               causal: bool = True,
+               xkv: Optional[jax.Array] = None) -> Tuple[jax.Array, Optional[dict]]:
+    """Full attention sub-block. With ``cache`` given, appends this call's K/V
+    at position kv_len (decode) and attends over the cache. ``xkv`` switches
+    to cross-attention (encoder output as K/V source, no rope on positions
+    mismatch kept simple: rope applied with own positions)."""
+    B, S, D = x.shape
+    NH, KV, dh = cfg.n_heads, cfg.n_kv_heads, cfg.d_head
+    src = xkv if xkv is not None else x
+    q = (x @ p["wq"]).reshape(B, S, NH, dh)
+    k = (src @ p["wk"]).reshape(B, src.shape[1], KV, dh)
+    v = (src @ p["wv"]).reshape(B, src.shape[1], KV, dh)
+
+    if xkv is None:  # rope only on self-attention
+        if cfg.mrope and positions3 is not None:
+            q = apply_mrope(q, positions3, cfg.rope_theta, cfg.mrope_sections)
+            k = apply_mrope(k, positions3, cfg.rope_theta, cfg.mrope_sections)
+        else:
+            q = apply_rope(q, positions, cfg.rope_theta)
+            k = apply_rope(k, positions, cfg.rope_theta)
+
+    new_cache = None
+    if cache is not None:
+        # prefill/decode: write K/V (and their absolute positions) into the
+        # cache at kv_len, then attend over the whole cache.  Unwritten slots
+        # carry position sentinel 2^30 so the causal mask drops them; sliding-
+        # window ring buffers stay correct because masking always uses true
+        # absolute positions, never slot indices.
+        ck, cv, cpos = cache["k"], cache["v"], cache["pos"]
+        S_cache = ck.shape[1]
+        if S > S_cache:
+            # SWA prefill: only the last window of K/V can ever be attended
+            k_w, v_w = k[:, -S_cache:], v[:, -S_cache:]
+            p_w = positions[:, -S_cache:].astype(jnp.int32)
+            idx = jnp.int32(0)
+        else:
+            k_w, v_w, p_w = k, v, positions.astype(jnp.int32)
+            idx = kv_len[0] if kv_len is not None else jnp.int32(0)
+        ck = jax.lax.dynamic_update_slice(ck, k_w.astype(ck.dtype), (0, idx, 0, 0))
+        cv = jax.lax.dynamic_update_slice(cv, v_w.astype(cv.dtype), (0, idx, 0, 0))
+        cpos = jax.lax.dynamic_update_slice(cpos, p_w, (0, idx))
+        new_cache = {"k": ck, "v": cv, "pos": cpos}
+        out = attention(q, ck, cv, positions, cpos, causal=causal,
+                        window=cfg.swa_window, kv_len=None,
+                        q_block=cfg.attn_q_block, kv_block=cfg.attn_kv_block,
+                        cfg=cfg)
+    else:
+        pos_k = positions if xkv is None else jnp.broadcast_to(
+            jnp.arange(src.shape[1], dtype=jnp.int32)[None], (B, src.shape[1]))
+        out = attention(q, k, v, positions, pos_k, causal=causal,
+                        window=cfg.swa_window, kv_len=None,
+                        q_block=cfg.attn_q_block, kv_block=cfg.attn_kv_block,
+                        cfg=cfg)
+
+    out = out.reshape(B, S, NH * dh) @ p["wo"]
+    return out, new_cache
+
+
+# ---------------------------------------------------------------------------
+# MLPs
+# ---------------------------------------------------------------------------
+
+
+def mlp_block(p: dict, x: jax.Array, cfg: ModelConfig) -> jax.Array:
+    if cfg.mlp_type == "swiglu":
+        return (jax.nn.silu(x @ p["w_gate"]) * (x @ p["w_up"])) @ p["w_down"]
+    return jax.nn.gelu(x @ p["w_in"]) @ p["w_down"]

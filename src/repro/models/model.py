@@ -1,0 +1,541 @@
+"""Model assembly: parameter init, layer-scanned forward passes, training
+loss, prefill and decode for all six architecture families.
+
+Conventions:
+  * params are plain pytrees; per-layer tensors carry a leading (L, ...) axis
+    and are driven by lax.scan (HLO size O(1) in depth; enables per-layer
+    remat + XLA collective/compute overlap across layers).
+  * matmul params in cfg.param_dtype (bf16); norms/SSM time-constants f32.
+  * caches: attention {"k","v"[,"pos"]} per layer stacked (L, B, S, KV, dh);
+    SSM {"ssm","conv"}; ring buffers for sliding-window attention.
+  * losses ignore label == -1; CE is computed in sequence chunks so the
+    (B, S, V) logits tensor never materializes (vocab stays sharded).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from . import layers, moe, ssm
+from .config import ModelConfig
+
+CE_CHUNK = 256
+
+
+def _pdt(cfg: ModelConfig):
+    return jnp.dtype(cfg.param_dtype)
+
+
+# ---------------------------------------------------------------------------
+# init
+# ---------------------------------------------------------------------------
+
+
+def _dense_block_init(key, cfg: ModelConfig, n_layers: int, cross: bool = False):
+    D, NH, KV, dh, F = (cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.d_head,
+                        cfg.d_ff)
+    ks = jax.random.split(key, 16)
+    dt = _pdt(cfg)
+    s = 0.02
+    so = 0.02 / (2 * max(1, cfg.n_layers + cfg.enc_layers)) ** 0.5
+    L = n_layers
+
+    def w(k, *shape, scale=s):
+        return (jax.random.normal(k, (L, *shape), jnp.float32) * scale).astype(dt)
+
+    p = {
+        "ln1": jnp.ones((L, D), jnp.float32),
+        "wq": w(ks[0], D, NH * dh),
+        "wk": w(ks[1], D, KV * dh),
+        "wv": w(ks[2], D, KV * dh),
+        "wo": w(ks[3], NH * dh, D, scale=so),
+        "ln2": jnp.ones((L, D), jnp.float32),
+    }
+    if cfg.use_layernorm:
+        p["ln1_b"] = jnp.zeros((L, D), jnp.float32)
+        p["ln2_b"] = jnp.zeros((L, D), jnp.float32)
+    if cross:
+        p.update({
+            "ln_c": jnp.ones((L, D), jnp.float32),
+            "wq_c": w(ks[4], D, NH * dh),
+            "wk_c": w(ks[5], D, KV * dh),
+            "wv_c": w(ks[6], D, KV * dh),
+            "wo_c": w(ks[7], NH * dh, D, scale=so),
+        })
+        if cfg.use_layernorm:
+            p["ln_c_b"] = jnp.zeros((L, D), jnp.float32)
+    if cfg.family == "moe":
+        E, Fe = cfg.moe_experts, cfg.d_ff
+        p["router"] = (jax.random.normal(ks[8], (L, D, E), jnp.float32) * s
+                       ).astype(jnp.float32)
+        p["we_gate"] = w(ks[9], E, D, Fe)
+        p["we_up"] = w(ks[10], E, D, Fe)
+        p["we_down"] = w(ks[11], E, Fe, D, scale=so)
+        if cfg.moe_dense_residual:
+            p["w_gate"] = w(ks[12], D, F)
+            p["w_up"] = w(ks[13], D, F)
+            p["w_down"] = w(ks[14], F, D, scale=so)
+    else:
+        if cfg.mlp_type == "swiglu":
+            p["w_gate"] = w(ks[12], D, F)
+            p["w_up"] = w(ks[13], D, F)
+        else:
+            p["w_in"] = w(ks[12], D, F)
+        p["w_down"] = w(ks[14], F, D, scale=so)
+    return p
+
+
+def _mamba_block_init(key, cfg: ModelConfig, lead_shape: tuple):
+    D, d_in, N, H = cfg.d_model, cfg.d_inner, cfg.ssm_state, cfg.ssm_heads
+    K = cfg.ssm_conv
+    conv_ch = d_in + 2 * N
+    ks = jax.random.split(key, 6)
+    dt = _pdt(cfg)
+    L = lead_shape
+
+    def w(k, *shape, scale=0.02):
+        return (jax.random.normal(k, (*L, *shape), jnp.float32) * scale).astype(dt)
+
+    return {
+        "norm": jnp.ones((*L, D), jnp.float32),
+        "in_proj": w(ks[0], D, 2 * d_in + 2 * N + H),
+        "conv_w": w(ks[1], K, conv_ch, scale=0.1).astype(jnp.float32),
+        "conv_b": jnp.zeros((*L, conv_ch), jnp.float32),
+        "A_log": jnp.zeros((*L, H), jnp.float32),           # A = -1
+        "D": jnp.ones((*L, H), jnp.float32),
+        "dt_bias": jnp.full((*L, H), -2.0, jnp.float32),    # softplus ~ 0.12
+        "out_norm": jnp.ones((*L, d_in), jnp.float32),
+        "out_proj": w(ks[2], d_in, D,
+                      scale=0.02 / (2 * max(1, cfg.n_layers)) ** 0.5),
+    }
+
+
+def init_params(cfg: ModelConfig, key: jax.Array) -> Dict[str, Any]:
+    keys = jax.random.split(key, 8)
+    dt = _pdt(cfg)
+    D, V = cfg.d_model, cfg.vocab
+    p: Dict[str, Any] = {
+        "embed": (jax.random.normal(keys[0], (V, D), jnp.float32) * 0.02).astype(dt),
+        "final_norm": jnp.ones((D,), jnp.float32),
+        "head": (jax.random.normal(keys[1], (D, V), jnp.float32) * 0.02).astype(dt),
+    }
+    if cfg.use_layernorm:
+        p["final_norm_b"] = jnp.zeros((D,), jnp.float32)
+
+    if cfg.family == "ssm":
+        p["blocks"] = _mamba_block_init(keys[2], cfg, (cfg.n_layers,))
+    elif cfg.family == "hybrid":
+        every = cfg.hybrid_attn_every
+        groups = cfg.n_layers // every
+        p["mamba"] = _mamba_block_init(keys[2], cfg, (groups, every))
+        shared = _dense_block_init(keys[3], cfg, 1)
+        p["shared"] = jax.tree.map(lambda a: a[0], shared)
+    elif cfg.is_encdec:
+        p["enc_blocks"] = _dense_block_init(keys[2], cfg, cfg.enc_layers)
+        p["dec_blocks"] = _dense_block_init(keys[3], cfg, cfg.n_layers,
+                                            cross=True)
+        p["enc_norm"] = jnp.ones((D,), jnp.float32)
+    else:
+        p["blocks"] = _dense_block_init(keys[2], cfg, cfg.n_layers)
+    if cfg.modality == "vision_stub":
+        p["patch_proj"] = (jax.random.normal(keys[4], (D, D), jnp.float32)
+                           * 0.02).astype(dt)
+    return p
+
+
+def abstract_params(cfg: ModelConfig):
+    """ShapeDtypeStruct pytree — used by the dry-run (no allocation)."""
+    return jax.eval_shape(functools.partial(init_params, cfg),
+                          jax.random.PRNGKey(0))
+
+
+# ---------------------------------------------------------------------------
+# blocks
+# ---------------------------------------------------------------------------
+
+
+def _dense_block_fn(lp: dict, x: jax.Array, cfg: ModelConfig, *,
+                    positions, positions3=None, cache=None, kv_len=None,
+                    causal=True, enc_out=None):
+    """One transformer block; returns (x, aux, new_cache)."""
+    h, new_self = layers.attn_block(
+        lp, layers.norm(x, lp, cfg, "ln1"), cfg, positions=positions,
+        positions3=positions3,
+        cache=None if cache is None else cache.get("self"),
+        kv_len=kv_len, causal=causal)
+    x = x + h
+    new_cache = None
+    if enc_out is not None or "wq_c" in lp:
+        cp = {k[:-2]: v for k, v in lp.items() if k.endswith("_c")}
+        cross_cache = None if cache is None else cache.get("cross")
+        if cross_cache is not None:
+            # decode: K/V precomputed at prefill
+            B, S, D = x.shape
+            NH, KV, dh = cfg.n_heads, cfg.n_kv_heads, cfg.d_head
+            qc = (layers.norm(x, lp, cfg, "ln_c") @ cp["wq"]).reshape(B, S, NH, dh)
+            Sk = cross_cache["k"].shape[1]
+            pos_k = jnp.broadcast_to(jnp.arange(Sk, dtype=jnp.int32)[None], (B, Sk))
+            o = layers.attention(qc, cross_cache["k"], cross_cache["v"],
+                                 positions, pos_k, causal=False,
+                                 q_block=cfg.attn_q_block,
+                                 kv_block=cfg.attn_kv_block, cfg=cfg)
+            h = o.reshape(B, S, NH * dh) @ cp["wo"]
+        else:
+            h, _ = layers.attn_block(cp, layers.norm(x, lp, cfg, "ln_c"), cfg,
+                                     positions=positions, causal=False,
+                                     xkv=enc_out)
+        x = x + h
+    aux = jnp.float32(0)
+    xn = layers.norm(x, lp, cfg, "ln2")
+    if cfg.family == "moe":
+        y, aux = moe.moe_block(lp, xn, cfg)
+        if cfg.moe_dense_residual:
+            y = y + layers.mlp_block(lp, xn, cfg)
+        x = x + y
+    else:
+        x = x + layers.mlp_block(lp, xn, cfg)
+    if cache is not None:
+        new_cache = dict(cache)
+        if new_self is not None:
+            new_cache["self"] = new_self
+    return x, aux, new_cache
+
+
+def _mamba_block_fn(lp: dict, x: jax.Array, cfg: ModelConfig, *,
+                    cache=None):
+    xn = layers.rmsnorm(x, lp["norm"])
+    if cache is None:
+        return x + ssm.ssd_forward(lp, xn, cfg), None
+    y, new_cache = ssm.ssd_decode(lp, xn, cfg, cache)
+    return x + y, new_cache
+
+
+def _remat(fn, cfg: ModelConfig):
+    if cfg.remat == "none":
+        return fn
+    if cfg.remat == "dots":
+        pol = jax.checkpoint_policies.dots_with_no_batch_dims_saveable
+    else:
+        pol = jax.checkpoint_policies.nothing_saveable
+    return jax.checkpoint(fn, policy=pol)
+
+
+# ---------------------------------------------------------------------------
+# forward (training / scoring)
+# ---------------------------------------------------------------------------
+
+
+def _embed_inputs(params, batch, cfg: ModelConfig):
+    tokens = batch["tokens"]
+    B, S = tokens.shape
+    x = params["embed"][tokens]
+    if cfg.modality == "vision_stub" and "patch_embeds" in batch:
+        pe = batch["patch_embeds"].astype(x.dtype) @ params["patch_proj"]
+        F = pe.shape[1]
+        x = jnp.concatenate([pe, x[:, F:]], axis=1)
+    positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32)[None], (B, S))
+    positions3 = batch.get("positions3")
+    if cfg.mrope and positions3 is None:
+        positions3 = jnp.broadcast_to(positions[None], (3, B, S))
+    return x, positions, positions3
+
+
+def _run_decoder_train(params, x, cfg: ModelConfig, positions, positions3):
+    if cfg.family == "ssm":
+        fn = _remat(lambda lp, h: _mamba_block_fn(lp, h, cfg)[0], cfg)
+
+        def body(h, lp):
+            return layers.shard_act(fn(lp, h), cfg), None
+        x, _ = jax.lax.scan(body, layers.shard_act(x, cfg), params["blocks"])
+        return x, jnp.float32(0)
+
+    if cfg.family == "hybrid":
+        mfn = _remat(lambda lp, h: _mamba_block_fn(lp, h, cfg)[0], cfg)
+        sfn = _remat(lambda sp, h: _dense_block_fn(
+            sp, h, cfg, positions=positions, positions3=positions3)[0], cfg)
+        shared = params["shared"]
+
+        def group(h, gp):
+            def inner(h2, lp):
+                return layers.shard_act(mfn(lp, h2), cfg), None
+            h, _ = jax.lax.scan(inner, h, gp)
+            h = layers.shard_act(sfn(shared, h), cfg)
+            return h, None
+        x, _ = jax.lax.scan(group, layers.shard_act(x, cfg), params["mamba"])
+        return x, jnp.float32(0)
+
+    fn = _remat(lambda lp, h: _dense_block_fn(
+        lp, h, cfg, positions=positions, positions3=positions3)[:2], cfg)
+
+    def body(carry, lp):
+        h, aux = carry
+        h, aux_l = fn(lp, h)
+        return (layers.shard_act(h, cfg), aux + aux_l), None
+    (x, aux), _ = jax.lax.scan(body, (layers.shard_act(x, cfg),
+                                      jnp.float32(0)), params["blocks"])
+    return x, aux
+
+
+def _run_encoder(params, frames, cfg: ModelConfig):
+    B, S, D = frames.shape
+    positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32)[None], (B, S))
+    fn = _remat(lambda lp, h: _dense_block_fn(
+        lp, h, cfg, positions=positions, causal=False)[0], cfg)
+
+    def body(h, lp):
+        return layers.shard_act(fn(lp, h), cfg), None
+    x, _ = jax.lax.scan(body, layers.shard_act(frames.astype(_pdt(cfg)), cfg),
+                        params["enc_blocks"])
+    return layers.rmsnorm(x, params["enc_norm"])
+
+
+def _run_decoder_train_encdec(params, x, cfg, positions, enc_out):
+    fn = _remat(lambda lp, h: _dense_block_fn(
+        lp, h, cfg, positions=positions, enc_out=enc_out)[0], cfg)
+
+    def body(h, lp):
+        return layers.shard_act(fn(lp, h), cfg), None
+    x, _ = jax.lax.scan(body, layers.shard_act(x, cfg), params["dec_blocks"])
+    return x, jnp.float32(0)
+
+
+def chunked_ce_loss(x: jax.Array, head: jax.Array, labels: jax.Array,
+                    chunk: int = CE_CHUNK) -> Tuple[jax.Array, jax.Array]:
+    """Mean CE over labels >= 0 without materializing (B, S, V) logits."""
+    B, S, D = x.shape
+    nc = -(-S // chunk)
+    pad = nc * chunk - S
+    if pad:
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0)))
+        labels = jnp.pad(labels, ((0, 0), (0, pad)), constant_values=-1)
+    xc = x.reshape(B, nc, chunk, D).swapaxes(0, 1)
+    lc = labels.reshape(B, nc, chunk).swapaxes(0, 1)
+
+    def step(carry, inp):
+        tot, cnt = carry
+        xb, lb = inp
+        logits = (xb @ head).astype(jnp.float32)
+        lse = jax.nn.logsumexp(logits, axis=-1)
+        gold = jnp.take_along_axis(
+            logits, jnp.maximum(lb, 0)[..., None], axis=-1)[..., 0]
+        valid = (lb >= 0)
+        tot = tot + jnp.sum(jnp.where(valid, lse - gold, 0.0))
+        cnt = cnt + jnp.sum(valid)
+        return (tot, cnt), None
+
+    (tot, cnt), _ = jax.lax.scan(step, (jnp.float32(0), jnp.int32(0)), (xc, lc))
+    return tot / jnp.maximum(cnt, 1), cnt
+
+
+def forward_loss(params, batch, cfg: ModelConfig) -> Tuple[jax.Array, Dict]:
+    """Training forward: mean CE + MoE aux. batch: tokens, labels (+extras)."""
+    if cfg.is_encdec:
+        enc_out = _run_encoder(params, batch["frames"], cfg)
+        x, positions, _ = _embed_inputs(params, batch, cfg)
+        x, aux = _run_decoder_train_encdec(params, x, cfg, positions, enc_out)
+    else:
+        x, positions, positions3 = _embed_inputs(params, batch, cfg)
+        x, aux = _run_decoder_train(params, x, cfg, positions, positions3)
+    x = layers.norm(x, params, cfg, "final_norm")
+    loss, n_tok = chunked_ce_loss(x, params["head"], batch["labels"])
+    aux_w = 0.01 if cfg.family == "moe" else 0.0
+    total = loss + aux_w * aux / max(1, cfg.n_layers)
+    return total, {"ce": loss, "aux": aux, "tokens": n_tok}
+
+
+# ---------------------------------------------------------------------------
+# serving: prefill + decode
+# ---------------------------------------------------------------------------
+
+
+def init_cache(cfg: ModelConfig, batch_size: int, cache_len: int,
+               enc_len: int = 0, dtype=None) -> Dict:
+    """Abstract-friendly cache allocation (zeros; dry-run uses eval_shape)."""
+    dt = dtype or _pdt(cfg)
+    B = batch_size
+    KV, dh = cfg.n_kv_heads, cfg.d_head
+    W = min(cache_len, cfg.swa_window) if cfg.swa_window else cache_len
+
+    def attn_cache(L, S, with_pos=True):
+        c = {"k": jnp.zeros((L, B, S, KV, dh), dt),
+             "v": jnp.zeros((L, B, S, KV, dh), dt)}
+        if with_pos:
+            # position sentinel 2^30 = "unwritten" (causal mask drops it)
+            c["pos"] = jnp.full((L, B, S), 2 ** 30, jnp.int32)
+        return c
+
+    if cfg.family == "ssm":
+        L = cfg.n_layers
+        return {"ssm": jnp.zeros((L, B, cfg.ssm_heads, cfg.ssm_head_dim,
+                                  cfg.ssm_state), jnp.float32),
+                "conv": jnp.zeros((L, B, cfg.ssm_conv - 1,
+                                   cfg.d_inner + 2 * cfg.ssm_state), dt)}
+    if cfg.family == "hybrid":
+        every = cfg.hybrid_attn_every
+        G = cfg.n_layers // every
+        return {
+            "mamba": {"ssm": jnp.zeros((G, every, B, cfg.ssm_heads,
+                                        cfg.ssm_head_dim, cfg.ssm_state),
+                                       jnp.float32),
+                      "conv": jnp.zeros((G, every, B, cfg.ssm_conv - 1,
+                                         cfg.d_inner + 2 * cfg.ssm_state), dt)},
+            "shared": attn_cache(G, cache_len),
+        }
+    if cfg.is_encdec:
+        return {"self": attn_cache(cfg.n_layers, W),
+                "cross": attn_cache(cfg.n_layers, enc_len, with_pos=False)}
+    return attn_cache(cfg.n_layers, W)
+
+
+def prefill(params, batch, cfg: ModelConfig,
+            cache_len: int = 0) -> Tuple[jax.Array, Dict]:
+    """Process a full prompt, returning last-position logits + filled cache.
+
+    ``cache_len`` sizes the KV cache (>= prompt length; the default leaves no
+    headroom for generation — serving passes prompt + max_new_tokens).
+    """
+    B, S = batch["tokens"].shape
+    cache_len = max(cache_len, S)
+    if cfg.is_encdec:
+        enc_out = _run_encoder(params, batch["frames"], cfg)
+        x, positions, _ = _embed_inputs(params, batch, cfg)
+        cache = init_cache(cfg, B, cache_len, enc_len=enc_out.shape[1])
+
+        def body(h, inp):
+            lp, sc, cc = inp
+            # fill cross cache once from enc_out
+            KV, dh = cfg.n_kv_heads, cfg.d_head
+            ck = (enc_out @ lp["wk_c"]).reshape(B, -1, KV, dh)
+            cv = (enc_out @ lp["wv_c"]).reshape(B, -1, KV, dh)
+            blk_cache = {"self": sc, "cross": {"k": ck.astype(sc["k"].dtype),
+                                               "v": cv.astype(sc["v"].dtype)}}
+            h, _, nc = _dense_block_fn(lp, h, cfg, positions=positions,
+                                       cache=blk_cache,
+                                       kv_len=jnp.zeros((B,), jnp.int32),
+                                       enc_out=None)
+            return layers.shard_act(h, cfg), (nc["self"], nc["cross"])
+        x, (self_c, cross_c) = jax.lax.scan(
+            body, x, (params["dec_blocks"], cache["self"], cache["cross"]))
+        cache = {"self": self_c, "cross": cross_c}
+    elif cfg.family == "ssm":
+        x, positions, _ = _embed_inputs(params, batch, cfg)
+
+        def body(h, lp):
+            xn = layers.rmsnorm(h, lp["norm"])
+            h2, st = _ssd_forward_with_state(lp, xn, cfg)
+            return layers.shard_act(h + h2, cfg), st
+        x, (ssm_states, conv_states) = jax.lax.scan(
+            body, layers.shard_act(x, cfg), params["blocks"])
+        cache = {"ssm": ssm_states, "conv": conv_states}
+    elif cfg.family == "hybrid":
+        x, positions, positions3 = _embed_inputs(params, batch, cfg)
+        cache = init_cache(cfg, B, cache_len)
+        shared = params["shared"]
+
+        def group(h, inp):
+            gp, g_attn = inp
+
+            def inner(h2, lp):
+                xn = layers.rmsnorm(h2, lp["norm"])
+                y, st = _ssd_forward_with_state(lp, xn, cfg)
+                return layers.shard_act(h2 + y, cfg), st
+            h, (s_ssm, s_conv) = jax.lax.scan(inner, h, gp)
+            h, _, nc = _dense_block_fn(shared, h, cfg, positions=positions,
+                                       cache={"self": g_attn},
+                                       kv_len=jnp.zeros((B,), jnp.int32))
+            return layers.shard_act(h, cfg), (s_ssm, s_conv, nc["self"])
+        x, (m_ssm, m_conv, sh_attn) = jax.lax.scan(
+            group, layers.shard_act(x, cfg), (params["mamba"], cache["shared"]))
+        cache = {"mamba": {"ssm": m_ssm, "conv": m_conv}, "shared": sh_attn}
+    else:
+        x, positions, positions3 = _embed_inputs(params, batch, cfg)
+        cache = init_cache(cfg, B, cache_len)
+
+        def body(carry, inp):
+            h = carry
+            lp, blk = inp
+            h, _, nc = _dense_block_fn(lp, h, cfg, positions=positions,
+                                       positions3=positions3,
+                                       cache={"self": blk},
+                                       kv_len=jnp.zeros((B,), jnp.int32))
+            return layers.shard_act(h, cfg), nc["self"]
+        x, cache = jax.lax.scan(body, layers.shard_act(x, cfg),
+                                (params["blocks"], cache))
+
+    x = layers.norm(x[:, -1:], params, cfg, "final_norm")
+    logits = (x[:, 0] @ params["head"]).astype(jnp.float32)
+    return logits, cache
+
+
+def _ssd_forward_with_state(lp, xn, cfg: ModelConfig):
+    """ssd_forward returning the final (ssm, conv) state from the same chunk
+    scan (prefill->decode handoff; no recomputation)."""
+    return ssm.ssd_forward(lp, xn, cfg, return_state=True)
+
+
+def decode_step(params, token: jax.Array, cache: Dict, cache_len: jax.Array,
+                cfg: ModelConfig) -> Tuple[jax.Array, Dict]:
+    """One decode step. token: (B, 1) int32; cache_len: (B,) filled length.
+    Returns (logits (B, V) f32, new cache)."""
+    B = token.shape[0]
+    x = params["embed"][token]
+    positions = jnp.broadcast_to(cache_len[:, None], (B, 1)).astype(jnp.int32)
+    positions3 = jnp.broadcast_to(positions[None], (3, B, 1)) if cfg.mrope else None
+
+    if cfg.family == "ssm":
+        def body(h, inp):
+            lp, s_ssm, s_conv = inp
+            h, nc = _mamba_block_fn(lp, h, cfg,
+                                    cache={"ssm": s_ssm, "conv": s_conv})
+            return h, (nc["ssm"], nc["conv"])
+        x, (ns, ncv) = jax.lax.scan(body, x, (params["blocks"], cache["ssm"],
+                                              cache["conv"]))
+        new_cache = {"ssm": ns, "conv": ncv}
+    elif cfg.family == "hybrid":
+        shared = params["shared"]
+
+        def group(h, inp):
+            gp, g_ssm, g_conv, g_attn = inp
+
+            def inner(h2, inp2):
+                lp, s_ssm, s_conv = inp2
+                h2, nc = _mamba_block_fn(lp, h2, cfg,
+                                         cache={"ssm": s_ssm, "conv": s_conv})
+                return h2, (nc["ssm"], nc["conv"])
+            h, (ns, ncv) = jax.lax.scan(inner, h, (gp, g_ssm, g_conv))
+            h, _, nc = _dense_block_fn(shared, h, cfg, positions=positions,
+                                       cache={"self": g_attn}, kv_len=cache_len)
+            return h, (ns, ncv, nc["self"])
+        x, (ns, ncv, sh_attn) = jax.lax.scan(
+            group, x, (params["mamba"], cache["mamba"]["ssm"],
+                       cache["mamba"]["conv"], cache["shared"]))
+        new_cache = {"mamba": {"ssm": ns, "conv": ncv}, "shared": sh_attn}
+    elif cfg.is_encdec:
+        def body(h, inp):
+            lp, s_blk, c_blk = inp
+            h, _, nc = _dense_block_fn(lp, h, cfg, positions=positions,
+                                       cache={"self": s_blk, "cross": c_blk},
+                                       kv_len=cache_len)
+            return h, nc["self"]
+        x, self_c = jax.lax.scan(
+            body, x, (params["dec_blocks"], cache["self"], cache["cross"]))
+        new_cache = {"self": self_c, "cross": cache["cross"]}
+    else:
+        write_pos = cache_len
+        if cfg.swa_window and cache["k"].shape[2] == cfg.swa_window:
+            write_pos = cache_len % cfg.swa_window   # ring buffer slot
+
+        def body(h, inp):
+            lp, blk = inp
+            h, _, nc = _dense_block_fn(lp, h, cfg, positions=positions,
+                                       positions3=positions3,
+                                       cache={"self": blk}, kv_len=write_pos)
+            return h, nc["self"]
+        x, new_cache = jax.lax.scan(body, x, (params["blocks"], cache))
+
+    x = layers.norm(x, params, cfg, "final_norm")
+    logits = (x[:, 0] @ params["head"]).astype(jnp.float32)
+    return logits, new_cache

@@ -1,0 +1,70 @@
+"""Mixture-of-Experts layer: top-k routing with capacity, sorted-scatter
+dispatch (static shapes, EP-shardable over the "model" axis), optional dense
+residual branch (Arctic).
+
+Dispatch strategy: instead of the GShard (T, E, C) one-hot einsum — O(T*E*C)
+memory, hopeless at T=65k tokens — assignments are sorted by expert id and
+scattered into (E, C, D) buffers; with experts sharded over "model" the
+scatter/gather lowers to the canonical MoE all-to-all pair.
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .config import ModelConfig
+
+
+def moe_block(p: dict, x: jax.Array, cfg: ModelConfig
+              ) -> Tuple[jax.Array, jax.Array]:
+    """x: (B, S, D) -> (y, aux_loss). Router in f32 for stability."""
+    B, S, D = x.shape
+    E, k = cfg.moe_experts, cfg.moe_top_k
+    T = B * S
+    xt = x.reshape(T, D)
+
+    logits = (xt.astype(jnp.float32) @ p["router"].astype(jnp.float32))
+    probs = jax.nn.softmax(logits, axis=-1)              # (T, E)
+    top_p, top_i = jax.lax.top_k(probs, k)               # (T, k)
+    top_p = top_p / jnp.maximum(top_p.sum(-1, keepdims=True), 1e-9)
+
+    # ---- load-balance aux loss (Switch): E * sum_e f_e * p_e ----
+    counts = jnp.zeros((E,), jnp.float32).at[top_i.reshape(-1)].add(1.0)
+    f_e = counts / (T * k)
+    p_e = probs.mean(0)
+    aux = E * jnp.sum(f_e * p_e)
+
+    # ---- sorted-scatter dispatch ----
+    # capacity floor of 8 keeps tiny-T (decode) batches dropless; training
+    # batches are governed by the capacity factor as usual.
+    cap = int(-(-T * k // E) * cfg.moe_capacity_factor)
+    cap = max(min(8, T), min(cap, T))
+    eid = top_i.reshape(-1)                               # (T*k,)
+    gate = top_p.reshape(-1)
+    tok = jnp.arange(T * k, dtype=jnp.int32) // k
+    order = jnp.argsort(eid)                              # stable
+    eid_s, gate_s, tok_s = eid[order], gate[order], tok[order]
+    start = jnp.searchsorted(eid_s, jnp.arange(E, dtype=eid_s.dtype), side="left")
+    slot = jnp.arange(T * k, dtype=jnp.int32) - start[eid_s]
+    keep = slot < cap
+    slot_c = jnp.where(keep, slot, cap - 1)
+
+    buf = jnp.zeros((E, cap, D), x.dtype)
+    src = jnp.where(keep[:, None], xt[tok_s], 0).astype(x.dtype)
+    buf = buf.at[eid_s, slot_c].add(src)                  # masked-add: dropped
+    # lanes collide only at slot cap-1 with zero contribution — exact.
+    # NOTE: an explicit expert-parallel constraint on buf/h was tried and
+    # REFUTED (EXPERIMENTS.md §Perf bonus iteration): GSPMD's propagated
+    # layout (capacity-dim sharding) beats forced expert-major by ~2.5x.
+
+    # ---- expert FFN (swiglu), EP/TP layout left to GSPMD propagation ----
+    h = jax.nn.silu(jnp.einsum("ecd,edf->ecf", buf, p["we_gate"])) \
+        * jnp.einsum("ecd,edf->ecf", buf, p["we_up"])
+    out_e = jnp.einsum("ecf,efd->ecd", h, p["we_down"])   # (E, cap, D)
+
+    # ---- combine ----
+    y_tok = out_e[eid_s, slot_c] * jnp.where(keep, gate_s, 0.0)[:, None].astype(x.dtype)
+    y = jnp.zeros((T, D), x.dtype).at[tok_s].add(y_tok)
+    return y.reshape(B, S, D), aux

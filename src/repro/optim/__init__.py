@@ -1,0 +1,10 @@
+"""Optimizer substrate: AdamW + the paper's exact-quantile primitives
+(deterministic clipping, quantile-scaled int8 gradient compression)."""
+from .adamw import (AdamWConfig, AdamWState, adamw_init, adamw_update,
+                    compress_int8, decompress_int8)
+from .quantile_ops import (pytree_exact_quantile, pytree_radix_quantile,
+                           quantile_clip_by_value)
+
+__all__ = ["AdamWConfig", "AdamWState", "adamw_init", "adamw_update",
+           "compress_int8", "decompress_int8", "pytree_exact_quantile",
+           "quantile_clip_by_value", "pytree_radix_quantile"]

@@ -1,0 +1,119 @@
+"""AdamW with optional exact-quantile gradient clipping and quantile-scaled
+int8 gradient compression (distributed-optimization tricks built on the
+paper's primitive).
+
+State layout mirrors the parameter pytree (m, v per leaf, f32), so optimizer
+state inherits parameter shardings (ZeRO-style when params are FSDP-sharded).
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .quantile_ops import pytree_exact_quantile, quantile_clip_by_value
+
+
+class AdamWState(NamedTuple):
+    step: jax.Array
+    m: Any
+    v: Any
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamWConfig:
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    # paper integration: exact-quantile magnitude clipping
+    quantile_clip: float = 0.0        # 0 disables; e.g. 0.999
+    quantile_clip_eps: float = 1e-3
+    grad_clip_norm: float = 1.0       # classic global-norm clip (0 disables)
+    warmup_steps: int = 100
+    # int8 gradient compression with exact-quantile scale (0 disables)
+    compress_bits: int = 0
+
+
+def adamw_init(params) -> AdamWState:
+    zeros = lambda p: jnp.zeros(p.shape, jnp.float32)
+    return AdamWState(step=jnp.zeros((), jnp.int32),
+                      m=jax.tree.map(zeros, params),
+                      v=jax.tree.map(zeros, params))
+
+
+def _global_norm(tree) -> jax.Array:
+    return jnp.sqrt(sum(jnp.sum(jnp.square(l.astype(jnp.float32)))
+                        for l in jax.tree.leaves(tree)))
+
+
+def compress_int8(grads, *, q: float = 0.999, eps: float = 1e-3):
+    """Quantile-scaled symmetric int8 quantization of the gradient pytree.
+
+    Production use: quantize before the cross-pod all-reduce (4x DCN bytes
+    saved); the exact-quantile scale makes the codebook deterministic across
+    replicas — no scale disagreement, no extra sync round.
+    Returns (int8 tree, scale).
+    """
+    from .quantile_ops import pytree_radix_quantile
+    scale = pytree_radix_quantile(grads, q).astype(jnp.float32)
+    scale = jnp.maximum(scale, 1e-12)
+
+    def enc(g):
+        gf = jnp.clip(g.astype(jnp.float32) / scale, -1.0, 1.0)
+        return jnp.round(gf * 127.0).astype(jnp.int8)
+
+    return jax.tree.map(enc, grads), scale
+
+
+def decompress_int8(q8, scale):
+    return jax.tree.map(lambda g: g.astype(jnp.float32) * (scale / 127.0), q8)
+
+
+def adamw_update(grads, state: AdamWState, params, cfg: AdamWConfig
+                 ) -> Tuple[Any, AdamWState, dict]:
+    """One optimizer step. Returns (new_params, new_state, metrics)."""
+    metrics = {}
+    if cfg.compress_bits == 8:
+        q8, scale = compress_int8(grads)
+        grads = decompress_int8(q8, scale)
+        metrics["compress_scale"] = scale
+    if cfg.quantile_clip:
+        grads, thr = quantile_clip_by_value(grads, cfg.quantile_clip,
+                                            eps=cfg.quantile_clip_eps)
+        metrics["clip_threshold"] = thr
+    gnorm = _global_norm(grads)
+    metrics["grad_norm"] = gnorm
+    if cfg.grad_clip_norm:
+        scale = jnp.minimum(1.0, cfg.grad_clip_norm / jnp.maximum(gnorm, 1e-12))
+        grads = jax.tree.map(lambda g: (g.astype(jnp.float32) * scale
+                                        ).astype(g.dtype), grads)
+
+    step = state.step + 1
+    warm = jnp.minimum(1.0, step.astype(jnp.float32) / max(1, cfg.warmup_steps))
+    lr = cfg.lr * warm
+    b1c = 1 - cfg.b1 ** step.astype(jnp.float32)
+    b2c = 1 - cfg.b2 ** step.astype(jnp.float32)
+
+    def upd(p, g, m, v):
+        gf = g.astype(jnp.float32)
+        m2 = cfg.b1 * m + (1 - cfg.b1) * gf
+        v2 = cfg.b2 * v + (1 - cfg.b2) * gf * gf
+        mh = m2 / b1c
+        vh = v2 / b2c
+        delta = mh / (jnp.sqrt(vh) + cfg.eps) + cfg.weight_decay * p.astype(jnp.float32)
+        return (p.astype(jnp.float32) - lr * delta).astype(p.dtype), m2, v2
+
+    flat_p, treedef = jax.tree.flatten(params)
+    flat_g = jax.tree.leaves(grads)
+    flat_m = jax.tree.leaves(state.m)
+    flat_v = jax.tree.leaves(state.v)
+    out = [upd(p, g, m, v) for p, g, m, v in zip(flat_p, flat_g, flat_m, flat_v)]
+    new_p = treedef.unflatten([o[0] for o in out])
+    new_m = treedef.unflatten([o[1] for o in out])
+    new_v = treedef.unflatten([o[2] for o in out])
+    return new_p, AdamWState(step=step, m=new_m, v=new_v), metrics

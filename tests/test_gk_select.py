@@ -1,0 +1,154 @@
+"""GK Select exactness: against np.partition oracles, across distributions
+(paper Fig. 3-4), dtypes, eps values, tie-heavy inputs — plus hypothesis
+property tests.  Exactness must hold for ANY eps."""
+import math
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (gk_select, gk_select_multi, exact_quantile,
+                        full_sort_quantile, afs_select, jeffers_select,
+                        approx_quantile, psrs_sort)
+
+
+def true_kth(x, q):
+    n = x.size
+    k = min(n, max(1, math.ceil(q * n)))
+    return np.sort(x.ravel())[k - 1]
+
+
+def dist(name, rng, shape):
+    """Paper §VI-B distributions."""
+    if name == "uniform":
+        return rng.uniform(-1e9, 1e9, size=shape).astype(np.float32)
+    if name == "zipf":
+        z = rng.zipf(2.5, size=shape).astype(np.float32)
+        return (z % 2_000_003) * 1e3 - 1e9
+    if name == "bimodal":
+        a = rng.normal(-3.33e8, 1.66e8, size=shape)
+        b = rng.normal(3.33e8, 1.66e8, size=shape)
+        pick = rng.random(shape) < 0.5
+        return np.where(pick, a, b).clip(-1e9, 1e9).astype(np.float32)
+    if name == "sorted":
+        P, n_i = shape
+        lo = np.linspace(-1e9, 1e9, P + 1)
+        out = np.stack([np.sort(rng.uniform(lo[i], lo[i + 1], n_i))
+                        for i in range(P)])
+        return out.astype(np.float32)
+    raise KeyError(name)
+
+
+class TestGKSelectExact:
+    @pytest.mark.parametrize("distname", ["uniform", "zipf", "bimodal",
+                                          "sorted"])
+    @pytest.mark.parametrize("q", [0.5, 0.99])
+    def test_distribution_robustness(self, distname, q):
+        """Fig. 3-4: exactness across all four distributions at q50/q99."""
+        rng = np.random.default_rng(hash((distname, q)) % 2 ** 31)
+        parts = dist(distname, rng, (8, 4096))
+        want = true_kth(parts, q)
+        got = float(gk_select(jnp.asarray(parts), q, eps=0.01))
+        assert got == want
+
+    @pytest.mark.parametrize("eps", [0.001, 0.01, 0.1, 0.3])
+    def test_exact_for_any_eps(self, eps):
+        rng = np.random.default_rng(0)
+        parts = rng.normal(size=(4, 2000)).astype(np.float32)
+        for q in [0.25, 0.5, 0.75]:
+            assert float(gk_select(jnp.asarray(parts), q, eps=eps)) == \
+                true_kth(parts, q)
+
+    @pytest.mark.parametrize("dtype", [np.float32, np.int32])
+    def test_dtypes(self, dtype):
+        rng = np.random.default_rng(1)
+        if dtype is np.int32:
+            parts = rng.integers(-10 ** 6, 10 ** 6, size=(4, 1024)).astype(dtype)
+        else:
+            parts = rng.normal(size=(4, 1024)).astype(dtype)
+        got = gk_select(jnp.asarray(parts), 0.5, eps=0.02)
+        assert np.asarray(got) == true_kth(parts, 0.5)
+
+    def test_speculative_matches_faithful(self):
+        rng = np.random.default_rng(2)
+        parts = rng.normal(size=(8, 1024)).astype(np.float32)
+        for q in [0.1, 0.5, 0.9]:
+            a = float(gk_select(jnp.asarray(parts), q, speculative=False))
+            b = float(gk_select(jnp.asarray(parts), q, speculative=True))
+            assert a == b == true_kth(parts, q)
+
+    def test_all_ties(self):
+        parts = np.full((4, 256), 7.0, np.float32)
+        assert float(gk_select(jnp.asarray(parts), 0.5)) == 7.0
+
+    def test_extreme_quantiles(self):
+        rng = np.random.default_rng(3)
+        parts = rng.normal(size=(4, 512)).astype(np.float32)
+        assert float(gk_select(jnp.asarray(parts), 1.0)) == parts.max()
+        got_min = float(gk_select(jnp.asarray(parts), 1e-9))
+        assert got_min == np.sort(parts.ravel())[0]
+
+    def test_multi_quantile(self):
+        rng = np.random.default_rng(4)
+        parts = rng.normal(size=(8, 2048)).astype(np.float32)
+        qs = (0.05, 0.25, 0.5, 0.75, 0.95)
+        got = np.asarray(gk_select_multi(jnp.asarray(parts), qs, eps=0.01))
+        for q, g in zip(qs, got):
+            assert g == true_kth(parts, q)
+
+    def test_flat_wrapper(self):
+        rng = np.random.default_rng(5)
+        x = rng.normal(size=4096).astype(np.float32)
+        assert float(exact_quantile(jnp.asarray(x), 0.5,
+                                    num_partitions=8)) == true_kth(x, 0.5)
+
+    @settings(max_examples=30, deadline=None)
+    @given(st.integers(2, 12), st.integers(32, 2048),
+           st.floats(0.0, 1.0), st.floats(0.005, 0.2),
+           st.integers(0, 2 ** 31 - 1))
+    def test_property_exactness(self, P, n_i, q, eps, seed):
+        rng = np.random.default_rng(seed)
+        parts = rng.normal(size=(P, n_i)).astype(np.float32)
+        got = float(gk_select(jnp.asarray(parts), q, eps=eps))
+        assert got == true_kth(parts, q)
+
+    @settings(max_examples=15, deadline=None)
+    @given(st.integers(1, 50), st.integers(0, 2 ** 31 - 1))
+    def test_property_heavy_ties(self, n_distinct, seed):
+        rng = np.random.default_rng(seed)
+        vals = rng.choice(n_distinct, size=(4, 512)).astype(np.float32)
+        for q in [0.3, 0.5, 0.8]:
+            assert float(gk_select(jnp.asarray(vals), q)) == true_kth(vals, q)
+
+
+class TestBaselines:
+    def test_all_agree(self):
+        rng = np.random.default_rng(6)
+        parts = rng.normal(size=(8, 2048)).astype(np.float32)
+        for q in [0.01, 0.5, 0.99]:
+            want = true_kth(parts, q)
+            jparts = jnp.asarray(parts)
+            assert float(full_sort_quantile(jparts, q)) == want
+            assert float(afs_select(jparts, q)) == want
+            assert float(jeffers_select(jparts, q)) == want
+            assert float(gk_select(jparts, q)) == want
+
+    def test_approx_within_bound(self):
+        rng = np.random.default_rng(7)
+        parts = rng.normal(size=(8, 4096)).astype(np.float32)
+        n = parts.size
+        eps = 0.01
+        flat = np.sort(parts.ravel())
+        for q in [0.1, 0.5, 0.9]:
+            k = min(n, max(1, math.ceil(q * n)))
+            v = float(approx_quantile(jnp.asarray(parts), q, eps=eps))
+            r = np.searchsorted(flat, v, side="right")
+            assert abs(r - k) <= eps * n + 1
+
+    def test_psrs_full_sort(self):
+        rng = np.random.default_rng(8)
+        parts = rng.normal(size=(8, 512)).astype(np.float32)
+        got = np.asarray(psrs_sort(jnp.asarray(parts)))
+        assert np.array_equal(got, np.sort(parts.ravel()))

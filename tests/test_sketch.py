@@ -1,0 +1,138 @@
+"""GK sketch layer: invariants (paper Eq. 1), space bound (Eq. 2), query rank
+error, merges (foldLeft vs tree), and the TPU sample sketch's eps*n bound —
+including hypothesis property tests."""
+import copy
+import math
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (GKSketch, merge_fold_left, merge_tree,
+                        local_sample_sketch, query_merged_sketch,
+                        sample_sketch_params)
+
+
+def rank_error(flat_sorted, value, k):
+    r_lo = np.searchsorted(flat_sorted, value, side="left") + 1
+    r_hi = np.searchsorted(flat_sorted, value, side="right")
+    if r_lo <= k <= r_hi:
+        return 0
+    return min(abs(r_lo - k), abs(r_hi - k))
+
+
+class TestGKSketch:
+    def test_invariant_eq1(self):
+        rng = np.random.default_rng(0)
+        sk = GKSketch(0.05, head_size=500, compress_threshold=100)
+        sk.insert_batch(rng.normal(size=20_000))
+        sk.flush()
+        assert np.all((sk.g + sk.delta)[1:-1] <= math.floor(2 * 0.05 * sk.n))
+
+    def test_mass_conservation(self):
+        rng = np.random.default_rng(1)
+        sk = GKSketch(0.02, head_size=1000, compress_threshold=200)
+        n = 50_000
+        sk.insert_batch(rng.normal(size=n))
+        sk.flush()
+        rmin, rmax = sk.rank_bounds()
+        assert rmin[-1] == n
+
+    def test_space_bound_eq2(self):
+        rng = np.random.default_rng(2)
+        eps, n = 0.01, 200_000
+        sk = GKSketch(eps, head_size=5000, compress_threshold=1000)
+        sk.insert_batch(rng.normal(size=n))
+        sk.flush()
+        bound = (1 / eps) * math.log2(eps * n) + 1
+        assert sk.size <= 3 * bound  # small-constant slack over Eq. 2
+
+    @pytest.mark.parametrize("q", [0.001, 0.01, 0.5, 0.99, 0.999])
+    def test_query_rank_error(self, q):
+        rng = np.random.default_rng(3)
+        eps, n = 0.01, 100_000
+        x = rng.normal(size=n)
+        sk = GKSketch(eps, head_size=2000, compress_threshold=500)
+        sk.insert_batch(x)
+        flat = np.sort(x)
+        k = min(n, max(1, math.ceil(q * n)))
+        assert rank_error(flat, sk.query(q), k) <= eps * n
+
+    @pytest.mark.parametrize("merger", [merge_fold_left, merge_tree])
+    def test_merge_rank_error(self, merger):
+        rng = np.random.default_rng(4)
+        eps, n, P = 0.01, 80_000, 16
+        x = rng.normal(size=n)
+        sks = []
+        for part in x.reshape(P, -1):
+            s = GKSketch(eps, head_size=1000, compress_threshold=300)
+            s.insert_batch(part)
+            s.flush()
+            sks.append(s)
+        merged = merger([copy.deepcopy(s) for s in sks])
+        flat = np.sort(x)
+        for q in [0.01, 0.5, 0.99]:
+            k = min(n, max(1, math.ceil(q * n)))
+            assert rank_error(flat, merged.query(q), k) <= eps * n
+
+    def test_modified_spark_gk_adaptive_head(self):
+        """Paper §IV-E3: geometric buffer restores classical asymptotics —
+        check the buffer tracks O(|S|) and queries stay in bound."""
+        rng = np.random.default_rng(5)
+        eps, n = 0.02, 60_000
+        sk = GKSketch(eps, adaptive_head=True, alpha=1.5)
+        x = rng.normal(size=n)
+        sk.insert_batch(x)
+        sk.flush()
+        assert sk._B <= max(8, math.ceil(1.5 * sk.size)) + 1
+        flat = np.sort(x)
+        assert rank_error(flat, sk.query(0.5), n // 2) <= eps * n
+
+    @settings(max_examples=25, deadline=None)
+    @given(st.integers(1000, 30_000), st.floats(0.005, 0.1),
+           st.floats(0.0, 1.0), st.integers(0, 2 ** 31 - 1))
+    def test_property_rank_bound(self, n, eps, q, seed):
+        rng = np.random.default_rng(seed)
+        x = rng.normal(size=n)
+        sk = GKSketch(eps, head_size=max(64, n // 10),
+                      compress_threshold=max(32, n // 40))
+        sk.insert_batch(x)
+        flat = np.sort(x)
+        k = min(n, max(1, math.ceil(q * n)))
+        assert rank_error(flat, sk.query(q), k) <= eps * n + 1
+
+
+class TestSampleSketch:
+    @settings(max_examples=25, deadline=None)
+    @given(st.integers(2, 16), st.integers(64, 4096), st.floats(0.01, 0.2),
+           st.floats(0.0, 1.0), st.integers(0, 2 ** 31 - 1))
+    def test_property_merged_rank_bound(self, P, n_i, eps, q, seed):
+        rng = np.random.default_rng(seed)
+        parts = rng.normal(size=(P, n_i)).astype(np.float32)
+        n = P * n_i
+        m, s = sample_sketch_params(n, n_i, eps, P)
+        vals, wts = jax.vmap(lambda x: local_sample_sketch(x, m, s))(
+            jnp.asarray(parts))
+        k = min(n, max(1, math.ceil(q * n)))
+        pivot = float(query_merged_sketch(vals.ravel(), wts.ravel(),
+                                          jnp.int32(k), P, m))
+        flat = np.sort(parts.ravel())
+        assert rank_error(flat, pivot, k) <= eps * n + 1
+
+    def test_duplicates_heavy(self):
+        """Zipf-like data with massive ties (paper Fig. 3 regime)."""
+        rng = np.random.default_rng(7)
+        parts = rng.zipf(2.5, size=(8, 2048)).clip(max=1000).astype(np.float32)
+        n = parts.size
+        eps = 0.02
+        m, s = sample_sketch_params(n, parts.shape[1], eps, 8)
+        vals, wts = jax.vmap(lambda x: local_sample_sketch(x, m, s))(
+            jnp.asarray(parts))
+        flat = np.sort(parts.ravel())
+        for q in [0.1, 0.5, 0.9]:
+            k = min(n, max(1, math.ceil(q * n)))
+            pivot = float(query_merged_sketch(vals.ravel(), wts.ravel(),
+                                              jnp.int32(k), 8, m))
+            assert rank_error(flat, pivot, k) <= eps * n + 1
