@@ -1,0 +1,108 @@
+"""Fused vs unfused band extraction: HBM pass counts + wall time.
+
+The cost model for the speculative GK Select round is streaming passes over
+the shard (DESIGN.md §3).  This module measures both sides of the claim:
+
+  * structural — `ops.hbm_passes()` counts full-array streams dispatched:
+    3 -> 1 for the single-pivot round, 3Q -> 1 for Q pivots,
+    32 -> 4 for radix_select_kth; parity of the results is asserted.
+  * wall-clock — us/call of the fused kernel vs the unfused trio
+    (interpret-mode Pallas on this container; trends, not TPU absolutes).
+"""
+import os
+import time
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ops
+from repro.kernels.ref import fused_select_ref
+
+
+def timed(fn, reps=3):
+    jax.block_until_ready(fn())
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        out = fn()
+    jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / reps * 1e6
+
+
+def run(csv_rows):
+    smoke = os.environ.get("REPRO_BENCH_SMOKE", "0") == "1"
+    n = 2 ** 16 if smoke else 2 ** 20
+    rng = np.random.default_rng(0)
+    x = jnp.asarray(rng.normal(size=n).astype(np.float32))
+    pivot = jnp.float32(np.median(np.asarray(x)))
+    cap = int(np.ceil(0.01 * n)) + 2
+
+    # ---- pass counts: speculative round, 1 pivot --------------------------
+    ops.reset_hbm_passes()
+    fc, fb, fa = ops.fused_count_extract(x, pivot, cap)
+    jax.block_until_ready(fc)
+    fused_passes = ops.hbm_passes()
+
+    ops.reset_hbm_passes()
+    uc = ops.count3(x, pivot)
+    ub = ops.extract_below(x, pivot, cap)
+    ua = ops.extract_above(x, pivot, cap)
+    jax.block_until_ready(uc)
+    unfused_passes = ops.hbm_passes()
+
+    parity = (np.array_equal(fc, uc) and np.array_equal(fb, ub)
+              and np.array_equal(fa, ua))
+    assert parity, "fused/unfused mismatch"
+    csv_rows.append(("fused/passes_1pivot", str(fused_passes),
+                     f"unfused={unfused_passes} parity={parity}"))
+
+    # ---- pass counts: Q pivots -------------------------------------------
+    Q = 5
+    pivots = jnp.asarray(np.quantile(np.asarray(x),
+                                     np.linspace(0.1, 0.9, Q)).astype(np.float32))
+    ops.reset_hbm_passes()
+    mc, mb, ma = ops.fused_count_extract_multi(x, pivots, cap)
+    jax.block_until_ready(mc)
+    fused_multi_passes = ops.hbm_passes()
+
+    ops.reset_hbm_passes()
+    for qi in range(Q):
+        c = ops.count3(x, pivots[qi])
+        b = ops.extract_below(x, pivots[qi], cap)
+        a = ops.extract_above(x, pivots[qi], cap)
+        assert (np.array_equal(mc[qi], c) and np.array_equal(mb[qi], b)
+                and np.array_equal(ma[qi], a)), f"multi pivot {qi} mismatch"
+    unfused_multi_passes = ops.hbm_passes()
+    csv_rows.append((f"fused/passes_{Q}pivots", str(fused_multi_passes),
+                     f"unfused={unfused_multi_passes} parity=True"))
+
+    # ---- pass counts: radix select ---------------------------------------
+    k = n // 2
+    want = float(np.sort(np.asarray(x))[k - 1])
+    ops.reset_hbm_passes()
+    v4 = ops.radix_select_kth(x, jnp.int32(k))
+    radix_passes = ops.hbm_passes()
+    ops.reset_hbm_passes()
+    v32 = ops.radix_select_kth_bitwise(x, jnp.int32(k))
+    bitwise_passes = ops.hbm_passes()
+    assert float(v4) == want and float(v32) == want
+    csv_rows.append(("fused/passes_radix_select", str(radix_passes),
+                     f"bitwise={bitwise_passes} exact=True"))
+
+    # ---- wall time (interpret-mode kernels; jnp ref as unfused 3-pass) ----
+    us_fused = timed(lambda: ops.fused_count_extract(x, pivot, cap)[0])
+    us_unfused = timed(lambda: fused_select_ref(x, pivot, cap)[0])
+    csv_rows.append(("fused/us_fused_1pivot", f"{us_fused:.0f}",
+                     f"unfused_jnp={us_unfused:.0f}us "
+                     f"speedup={us_unfused / max(us_fused, 1e-9):.2f}x"))
+
+    us_multi = timed(lambda: ops.fused_count_extract_multi(x, pivots, cap)[0])
+    csv_rows.append((f"fused/us_fused_{Q}pivots", f"{us_multi:.0f}",
+                     f"per_pivot={us_multi / Q:.0f}us"))
+
+    us_r4 = timed(lambda: ops.radix_select_kth(x, jnp.int32(k)))
+    us_r32 = timed(lambda: ops.radix_select_kth_bitwise(x, jnp.int32(k)))
+    csv_rows.append(("fused/us_radix4", f"{us_r4:.0f}",
+                     f"bitwise32={us_r32:.0f}us "
+                     f"speedup={us_r32 / max(us_r4, 1e-9):.2f}x"))
+    return csv_rows

@@ -16,7 +16,8 @@ import functools, json
 import numpy as np, jax, jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 from repro.core.distributed import (gk_select_sharded, count_discard_sharded,
-                                    approx_quantile_sharded, full_sort_sharded)
+                                    approx_quantile_sharded, full_sort_sharded,
+                                    shard_map_compat)
 from repro.launch import hlo_analysis
 from repro.launch.mesh import make_mesh
 
@@ -26,8 +27,8 @@ xs = jax.ShapeDtypeStruct((n,), jnp.float32)
 out = {}
 
 def phases(body):
-    f = jax.jit(jax.shard_map(body, mesh=mesh, in_specs=(P("data"),),
-                              out_specs=P(), check_vma=False))
+    f = jax.jit(shard_map_compat(body, mesh=mesh, in_specs=(P("data"),),
+                                 out_specs=P()))
     hlo = f.lower(xs).compile().as_text()
     a = hlo_analysis.analyze(hlo)
     return {"collective_ops": sum(a["collective_counts"].values()),

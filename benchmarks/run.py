@@ -1,15 +1,24 @@
 """Benchmark harness: one module per paper table/figure.
-Prints ``name,us_per_call,derived`` CSV (+ writes bench_results.csv)."""
+Prints ``name,us_per_call,derived`` CSV and writes two artifacts next to
+this file: ``bench_results.csv`` (human diffable) and ``BENCH_results.json``
+(machine-readable name -> {us_per_call, derived} so the perf trajectory is
+tracked across PRs).
+
+``REPRO_BENCH_SMOKE=1`` (or ``--smoke``) runs a ~30s subset on tiny sizes —
+the CI configuration — and writes to ``*.smoke.*`` filenames so it never
+clobbers the tracked full-run artifacts."""
 import csv
 import io
+import json
 import os
 import sys
 
-sys.path.insert(0, os.path.join(os.path.dirname(os.path.dirname(
-    os.path.abspath(__file__))), "src"))
+_REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+sys.path.insert(0, _REPO)                       # `benchmarks` package
+sys.path.insert(0, os.path.join(_REPO, "src"))  # `repro` package
 
 from benchmarks import (bench_scaling, bench_distributions, bench_complexity,
-                        bench_rounds, bench_roofline)
+                        bench_rounds, bench_roofline, bench_fused)
 
 MODULES = [
     ("fig1_2_scaling", bench_scaling),
@@ -17,16 +26,29 @@ MODULES = [
     ("tab4_complexity", bench_complexity),
     ("tab5_rounds", bench_rounds),
     ("roofline", bench_roofline),
+    ("fused", bench_fused),
+]
+
+# smoke: only the modules that honour REPRO_BENCH_SMOKE sizing and finish
+# in seconds on CPU (the shard_map/HLO modules spawn 8-device subprocesses).
+SMOKE_MODULES = [
+    ("fused", bench_fused),
 ]
 
 
 def main() -> None:
+    smoke = ("--smoke" in sys.argv[1:]
+             or os.environ.get("REPRO_BENCH_SMOKE", "0") == "1")
+    if smoke:
+        os.environ["REPRO_BENCH_SMOKE"] = "1"
     rows = [("name", "us_per_call", "derived")]
-    for name, mod in MODULES:
+    failed = False
+    for name, mod in (SMOKE_MODULES if smoke else MODULES):
         print(f"== {name} ==", file=sys.stderr)
         try:
             mod.run(rows)
-        except Exception as e:  # keep the harness running
+        except Exception as e:  # keep the harness running, fail at the end
+            failed = True
             rows.append((f"{name}/ERROR", "0", f"{type(e).__name__}: {e}"))
     out = io.StringIO()
     w = csv.writer(out)
@@ -34,9 +56,27 @@ def main() -> None:
         w.writerow(r)
     text = out.getvalue()
     print(text)
-    with open(os.path.join(os.path.dirname(os.path.abspath(__file__)),
-                           "bench_results.csv"), "w") as f:
+    here = os.path.dirname(os.path.abspath(__file__))
+    # Smoke runs write to *.smoke.* so they never clobber the tracked
+    # full-run trajectory artifacts.
+    suffix = ".smoke" if smoke else ""
+    with open(os.path.join(here, f"bench_results{suffix}.csv"), "w") as f:
         f.write(text)
+
+    def _num(us):
+        try:
+            return float(us)
+        except ValueError:
+            return us
+
+    payload = {name: {"us_per_call": _num(us), "derived": derived}
+               for name, us, derived in rows[1:]}
+    with open(os.path.join(here, f"BENCH_results{suffix}.json"), "w") as f:
+        json.dump(payload, f, indent=2, sort_keys=True)
+        f.write("\n")
+    if failed:
+        # ERROR rows (e.g. a bench_fused parity assert) must fail CI.
+        sys.exit(1)
 
 
 if __name__ == "__main__":

@@ -20,8 +20,11 @@ print(f"numpy oracle   = {np.sort(x)[int(np.ceil(0.99 * x.size)) - 1]:.6f}")
 parts = jnp.asarray(x.reshape(16, -1))
 median = gk_select(parts, 0.5, eps=0.01)                 # paper-faithful
 median_fast = gk_select(parts, 0.5, eps=0.01, speculative=True)  # 2-round
-assert float(median) == float(median_fast) == float(full_sort_quantile(parts, 0.5))
-print(f"median         = {float(median):.6f}  (3-round == 2-round == sort)")
+# fused Pallas kernel: counts + both candidate bands in ONE HBM pass/shard
+median_fused = gk_select(parts, 0.5, eps=0.01, block_select=True)
+assert (float(median) == float(median_fast) == float(median_fused)
+        == float(full_sort_quantile(parts, 0.5)))
+print(f"median         = {float(median):.6f}  (3-round == 2-round == fused == sort)")
 
 # --- 3. many quantiles in one job (shared sketch phase) ---------------------
 qs = (0.01, 0.25, 0.5, 0.75, 0.99)

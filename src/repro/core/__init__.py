@@ -15,7 +15,8 @@ from .baselines import (full_sort_quantile, psrs_sort, afs_select,
                         jeffers_select, approx_quantile, count_discard_rounds)
 from .distributed import (distributed_quantile, gk_select_sharded,
                           approx_quantile_sharded, count_discard_sharded,
-                          full_sort_sharded, tree_reduce_candidates)
+                          full_sort_sharded, tree_reduce_candidates,
+                          shard_map_compat)
 from . import local_ops
 
 __all__ = [
@@ -26,5 +27,6 @@ __all__ = [
     "approx_quantile", "count_discard_rounds",
     "distributed_quantile", "gk_select_sharded", "approx_quantile_sharded",
     "count_discard_sharded", "full_sort_sharded", "tree_reduce_candidates",
+    "shard_map_compat",
     "local_ops",
 ]

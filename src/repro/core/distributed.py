@@ -38,6 +38,19 @@ def _axis_size(axis) -> int:
     return jax.lax.psum(1, axis)
 
 
+def shard_map_compat(body, *, mesh, in_specs, out_specs):
+    """``jax.shard_map`` across jax versions: new-style ``jax.shard_map``
+    (check_vma) when present, ``jax.experimental.shard_map`` (check_rep)
+    otherwise.  Replication checking is off either way — the bodies return
+    deliberately replicated scalars from psum/pmax chains."""
+    if hasattr(jax, "shard_map"):
+        return jax.shard_map(body, mesh=mesh, in_specs=in_specs,
+                             out_specs=out_specs, check_vma=False)
+    from jax.experimental.shard_map import shard_map
+    return shard_map(body, mesh=mesh, in_specs=in_specs,
+                     out_specs=out_specs, check_rep=False)
+
+
 def tree_reduce_candidates(buf: jax.Array, axis: str, num_shards: int,
                            keep_largest: bool) -> jax.Array:
     """Butterfly (recursive-halving) reduction of a fixed-capacity candidate
@@ -48,8 +61,6 @@ def tree_reduce_candidates(buf: jax.Array, axis: str, num_shards: int,
     superset of the intersection of the global best with the pair's union.
     """
     cap = buf.shape[-1]
-    steps = max(1, int(math.log2(num_shards))) if num_shards > 1 else 0
-    idx = jax.lax.axis_index(axis)
     for j in range(int(math.log2(num_shards)) if num_shards > 1 else 0):
         d = 1 << j
         perm = [(i, i ^ d) for i in range(num_shards)]
@@ -75,12 +86,17 @@ def gather_candidates(buf: jax.Array, axis: str) -> jax.Array:
 def gk_select_sharded(x_local: jax.Array, *, q: float, eps: float, axis: str,
                       num_shards: int, speculative: bool = False,
                       reduce_strategy: str = "tree",
-                      count3_fn=None, extract_fns=None) -> jax.Array:
+                      count3_fn=None, extract_fns=None,
+                      fused_fn=None) -> jax.Array:
     """Body to run inside shard_map: x_local is this shard's (n_local,) block.
     Returns the exact quantile, replicated on every shard.
 
     count3_fn / extract_fns allow kernel injection (Pallas partition_count /
-    block-select) without changing the algorithm.
+    block-select) without changing the algorithm.  fused_fn injects the
+    single-pass fused band-extraction kernel
+    (``kernels.ops.fused_count_extract`` signature ``(x, pivot, cap) ->
+    (counts, below, above)``): the whole speculative count+extract phase
+    becomes ONE HBM stream over the shard (implies ``speculative=True``).
     """
     n_local = x_local.shape[0]
     n = n_local * num_shards
@@ -98,11 +114,15 @@ def gk_select_sharded(x_local: jax.Array, *, q: float, eps: float, axis: str,
 
     cap = local_ops.candidate_cap(n, eps, n_local)
 
-    if speculative:
+    if speculative or fused_fn is not None:
         # ---- Phase 2 (fused): counts psum + two-sided candidate reduce ----
-        counts = jax.lax.psum(count3(x_local, pivot), axis)
-        below = ex_below(x_local, pivot, cap)
-        above = ex_above(x_local, pivot, cap)
+        if fused_fn is not None:
+            c_local, below, above = fused_fn(x_local, pivot, cap)
+            counts = jax.lax.psum(c_local, axis)
+        else:
+            counts = jax.lax.psum(count3(x_local, pivot), axis)
+            below = ex_below(x_local, pivot, cap)
+            above = ex_above(x_local, pivot, cap)
         if reduce_strategy == "tree":
             below = tree_reduce_candidates(below, axis, num_shards, keep_largest=True)
             above = tree_reduce_candidates(above, axis, num_shards, keep_largest=False)
@@ -276,21 +296,33 @@ def full_sort_sharded(x_local: jax.Array, *, q: float, axis: str,
 def distributed_quantile(x: jax.Array, q: float, mesh: Mesh, *,
                          axis: str = "data", eps: float = 0.01,
                          method: str = "gk_select", speculative: bool = False,
-                         reduce_strategy: str = "tree") -> jax.Array:
+                         reduce_strategy: str = "tree",
+                         fused: bool = False) -> jax.Array:
     """Exact (or approximate, method='approx') quantile of a 1-D array sharded
     over ``axis`` of ``mesh``.  The entry point used by optimizer/serving
-    integrations."""
+    integrations.  ``fused=True`` injects the single-pass Pallas band
+    extraction into the gk_select body (one HBM stream per shard for the
+    whole count+extract phase)."""
     num_shards = mesh.shape[axis]
     if x.ndim != 1:
         raise ValueError("distributed_quantile expects a flat array")
     if x.size % num_shards:
         raise ValueError(f"size {x.size} % shards {num_shards} != 0 — pad first")
 
+    fused_fn = None
+    if fused:
+        if method != "gk_select":
+            raise ValueError(f"fused=True only applies to method='gk_select', "
+                             f"got method={method!r}")
+        from ..kernels.ops import make_fused_fn   # lazy: kernels optional
+        fused_fn = make_fused_fn()
+
     bodies = {
         "gk_select": functools.partial(gk_select_sharded, q=q, eps=eps,
                                        axis=axis, num_shards=num_shards,
                                        speculative=speculative,
-                                       reduce_strategy=reduce_strategy),
+                                       reduce_strategy=reduce_strategy,
+                                       fused_fn=fused_fn),
         "approx": functools.partial(approx_quantile_sharded, q=q, eps=eps,
                                     axis=axis, num_shards=num_shards),
         "afs": functools.partial(count_discard_sharded, q=q, axis=axis,
@@ -302,6 +334,5 @@ def distributed_quantile(x: jax.Array, q: float, mesh: Mesh, *,
     }
     body = bodies[method]
     spec = P(axis)
-    fn = jax.shard_map(body, mesh=mesh, in_specs=(spec,), out_specs=P(),
-                       check_vma=False)
+    fn = shard_map_compat(body, mesh=mesh, in_specs=(spec,), out_specs=P())
     return fn(x)

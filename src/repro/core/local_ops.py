@@ -55,8 +55,7 @@ def extract_above(x: jax.Array, pivot: jax.Array, cap: int) -> jax.Array:
     lo, hi = _sentinels(x.dtype)
     keys = jnp.where(x > pivot, x, hi)
     # top_k on negated keys -> k smallest.
-    neg = -keys if jnp.issubdtype(x.dtype, jnp.floating) else -keys
-    vals, _ = jax.lax.top_k(neg, cap)
+    vals, _ = jax.lax.top_k(-keys, cap)
     return -vals
 
 
@@ -67,6 +66,20 @@ def extract_below(x: jax.Array, pivot: jax.Array, cap: int) -> jax.Array:
     keys = jnp.where(x < pivot, x, lo)
     vals, _ = jax.lax.top_k(keys, cap)
     return vals
+
+
+def fused_count_extract(x: jax.Array, pivot: jax.Array, cap: int):
+    """The speculative round's per-shard work behind one seam: 3-way counts
+    plus both capped candidate bands, ``(counts, below, above)``.
+
+    This jnp reference implementation still streams the shard three times
+    (count + 2x top_k); ``repro.kernels.ops.fused_count_extract`` is the
+    bit-exact single-HBM-pass drop-in (DESIGN.md §2).  Callers that want
+    kernel injection swap the whole seam, not the three pieces.
+    """
+    return (count3(x, pivot),
+            extract_below(x, pivot, cap),
+            extract_above(x, pivot, cap))
 
 
 def kth_smallest(cands: jax.Array, k: jax.Array, cap: int) -> jax.Array:

@@ -43,6 +43,11 @@ def gk_select(parts: jax.Array, q: float, *, eps: float = 0.01,
 
     Exactness does not depend on eps; eps only sizes the sketch and the
     candidate buffers (|Delta_k| <= eps*n by the sketch guarantee).
+
+    ``block_select=True`` routes the count+extract work through the fused
+    Pallas band-extraction kernel (``kernels.ops.fused_count_extract``):
+    one HBM stream per shard instead of three, with the speculative
+    two-sided data flow (it subsumes ``speculative``).
     """
     P, n_i = parts.shape
     n = P * n_i
@@ -53,11 +58,25 @@ def gk_select(parts: jax.Array, q: float, *, eps: float = 0.01,
 
     cap = local_ops.candidate_cap(n, eps, n_i)
 
+    if block_select:
+        # ---- Rounds 2+3 fused into ONE streaming pass per shard: the
+        # kernel emits counts and both candidate bands from a single
+        # HBM->VMEM sweep.  (Lazy import: core stays usable without the
+        # kernels layer.)
+        from ..kernels import ops as kernel_ops
+        counts, below, above = jax.vmap(
+            lambda x: kernel_ops.fused_count_extract(x, pivot, cap))(parts)
+        counts = counts.sum(0)
+        return local_ops.resolve(pivot, k, counts[0], counts[1],
+                                 below, above, cap)
+
     if speculative:
-        # ---- Rounds 2+3 fused: count and two-sided extraction in one pass.
-        counts = jax.vmap(lambda x: local_ops.count3(x, pivot))(parts).sum(0)
-        below = jax.vmap(lambda x: local_ops.extract_below(x, pivot, cap))(parts)
-        above = jax.vmap(lambda x: local_ops.extract_above(x, pivot, cap))(parts)
+        # ---- Rounds 2+3 fused: count and two-sided extraction in one
+        # logical phase (still 3 jnp streams; block_select=True is the
+        # 1-stream kernel version).
+        counts, below, above = jax.vmap(
+            lambda x: local_ops.fused_count_extract(x, pivot, cap))(parts)
+        counts = counts.sum(0)
         lt, eq = counts[0], counts[1]
         return local_ops.resolve(pivot, k, lt, eq, below, above, cap)
 
@@ -95,12 +114,18 @@ def exact_quantile(x: jax.Array, q: float, *, eps: float = 0.01,
     return gk_select(parts, q, eps=eps)
 
 
-@functools.partial(jax.jit, static_argnames=("qs", "eps", "speculative"))
+@functools.partial(jax.jit, static_argnames=("qs", "eps", "speculative",
+                                             "block_select"))
 def gk_select_multi(parts: jax.Array, qs: tuple, *, eps: float = 0.01,
-                    speculative: bool = True) -> jax.Array:
+                    speculative: bool = True,
+                    block_select: bool = False) -> jax.Array:
     """Beyond-paper: Q quantiles in one job (qs is a static tuple of floats).
     The sketch phase is shared; the count/extract phases vmap over pivots
-    (Spark would run Q separate jobs)."""
+    (Spark would run Q separate jobs).
+
+    ``block_select=True`` uses the multi-pivot fused kernel
+    (``kernels.ops.fused_count_extract_multi``): each shard is streamed
+    from HBM ONCE for all Q pivots, instead of 3 passes per pivot."""
     P, n_i = parts.shape
     n = P * n_i
     ks = jnp.array([local_ops.target_rank(n, q) for q in qs], jnp.int32)
@@ -112,10 +137,23 @@ def gk_select_multi(parts: jax.Array, qs: tuple, *, eps: float = 0.01,
 
     cap = local_ops.candidate_cap(n, eps, n_i)
 
+    if block_select:
+        from ..kernels import ops as kernel_ops
+        counts, below, above = jax.vmap(
+            lambda x: kernel_ops.fused_count_extract_multi(x, pivots, cap))(parts)
+        counts = counts.sum(0)                     # (Q, 3)
+        below = jnp.swapaxes(below, 0, 1)          # (P, Q, cap) -> (Q, P, cap)
+        above = jnp.swapaxes(above, 0, 1)
+
+        def resolve_one(pivot, k, c, b, a):
+            return local_ops.resolve(pivot, k, c[0], c[1], b, a, cap)
+
+        return jax.vmap(resolve_one)(pivots, ks, counts, below, above)
+
     def one(pivot, k):
-        counts = jax.vmap(lambda x: local_ops.count3(x, pivot))(parts).sum(0)
-        below = jax.vmap(lambda x: local_ops.extract_below(x, pivot, cap))(parts)
-        above = jax.vmap(lambda x: local_ops.extract_above(x, pivot, cap))(parts)
+        counts, below, above = jax.vmap(
+            lambda x: local_ops.fused_count_extract(x, pivot, cap))(parts)
+        counts = counts.sum(0)
         return local_ops.resolve(pivot, k, counts[0], counts[1], below, above, cap)
 
     return jax.vmap(one)(pivots, ks)

@@ -2,11 +2,18 @@
 
 partition_count — 3-way Dutch counts (Round 2, memory-bound streaming)
 band_count      — open-band counts (radix/threshold selection primitive)
-ops             — jit wrappers, sortable-uint transform, radix_select_kth
+fused_select    — single-pass fused band extraction: counts + both capped
+                  candidate buffers in ONE HBM stream (multi-pivot variant
+                  included), plus the 256-bin byte histogram behind the
+                  4-pass radix select
+ops             — dispatch wrappers, HBM-pass counter, sortable-uint
+                  transform, radix_select_kth, injection hooks
 ref             — pure-jnp oracles the kernel tests compare against
 """
 from . import ops, ref
 from .partition_count import partition_count, LANES
 from .band_count import band_count
+from .fused_select import fused_select, fused_select_multi, byte_histogram
 
-__all__ = ["ops", "ref", "partition_count", "band_count", "LANES"]
+__all__ = ["ops", "ref", "partition_count", "band_count", "fused_select",
+           "fused_select_multi", "byte_histogram", "LANES"]

@@ -1,0 +1,310 @@
+"""Pallas TPU kernels: single-pass fused band extraction.
+
+The paper's speed claim hinges on Step 7 being *one* linear scan per
+partition: "extract all values within the error bound around this pivot
+in each partition in linear time".  The unfused executor pipeline streams
+each shard three times (``count3`` + two whole-array ``top_k`` extractions);
+on a bandwidth-bound workload HBM passes *are* the cost model, so this
+module collapses the trio into one HBM->VMEM sweep:
+
+``fused_select``        — one grid pass emits the 3-way (lt, eq, gt) counts
+                          AND both capped candidate buffers (the ``cap``
+                          largest values < pivot and ``cap`` smallest
+                          > pivot).  3 passes -> 1.
+``fused_select_multi``  — the same sweep answering Q pivots at once: the
+                          tile is loaded into VMEM once and scored against
+                          every pivot.  3Q passes -> 1.
+``byte_histogram``      — 256-bin histogram of one byte of the sortable-u32
+                          transform, restricted to a value-prefix group;
+                          turns ``ops.radix_select_kth`` from <=32
+                          bit-at-a-time passes into 4 byte passes.
+
+Selection strategy (DESIGN.md §2): each output buffer is a fixed
+``cap_pad``-lane running selection kept in the revisited VMEM output block.
+Every grid step merges the tile's masked candidates with the running buffer
+and re-selects the best ``cap_pad`` (``jax.lax.top_k`` — a bitonic
+partial-sort network on the VPU; interpret mode executes the identical
+jaxpr on CPU).  The merge operand lives entirely in VMEM, so HBM traffic
+stays one read of the shard plus O(cap) writeback.
+
+Layout contract is shared with ``partition_count``: callers pad the flat
+shard to (rows, LANES) row-major and pass the true length as ``n_valid``;
+``cap_pad`` must be a positive multiple of 128 (wrappers in ``ops`` round
+up and slice back down).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from .partition_count import LANES, DEFAULT_BLOCK_ROWS
+
+
+def _sentinels(dtype):
+    """(lowest, highest) padding sentinels matching local_ops semantics."""
+    if jnp.issubdtype(dtype, jnp.floating):
+        return jnp.array(-jnp.inf, dtype), jnp.array(jnp.inf, dtype)
+    info = jnp.iinfo(dtype)
+    return jnp.array(info.min, dtype), jnp.array(info.max, dtype)
+
+
+def _valid_mask(x, step, block_rows, n_valid):
+    row = jax.lax.broadcasted_iota(jnp.int32, x.shape, 0)
+    col = jax.lax.broadcasted_iota(jnp.int32, x.shape, 1)
+    return (step * block_rows * LANES + row * LANES + col) < n_valid
+
+
+def _merge_below(buf_row, keys, cap_pad):
+    """Running 'cap_pad largest' merge: tile keys (masked to -sentinel) vs
+    the (1, cap_pad) buffer row; descending output."""
+    merged = jnp.concatenate([keys.reshape(1, -1), buf_row], axis=1)
+    return jax.lax.top_k(merged, cap_pad)[0]
+
+
+def _merge_above(buf_row, keys, cap_pad):
+    """Running 'cap_pad smallest' merge (ascending) via negated top_k."""
+    merged = jnp.concatenate([keys.reshape(1, -1), buf_row], axis=1)
+    return -jax.lax.top_k(-merged, cap_pad)[0]
+
+
+# ---------------------------------------------------------------------------
+# single pivot
+# ---------------------------------------------------------------------------
+
+
+def _fused_kernel(pivot_ref, x_ref, count_ref, below_ref, above_ref, *,
+                  n_valid: int, block_rows: int, cap_pad: int):
+    """One grid step: 3-way counts into SMEM + both running candidate
+    selections into the revisited VMEM output blocks."""
+    step = pl.program_id(0)
+    lo, hi = _sentinels(x_ref.dtype)
+
+    @pl.when(step == 0)
+    def _init():
+        count_ref[0] = 0
+        count_ref[1] = 0
+        count_ref[2] = 0
+        below_ref[...] = jnp.full((1, cap_pad), lo, below_ref.dtype)
+        above_ref[...] = jnp.full((1, cap_pad), hi, above_ref.dtype)
+
+    x = x_ref[...]
+    pivot = pivot_ref[0]
+    valid = _valid_mask(x, step, block_rows, n_valid)
+
+    is_lt = valid & (x < pivot)
+    is_gt = valid & (x > pivot)
+    lt = jnp.sum(jnp.where(is_lt, 1, 0), dtype=jnp.int32)
+    eq = jnp.sum(jnp.where(valid & (x == pivot), 1, 0), dtype=jnp.int32)
+    gt = jnp.sum(jnp.where(is_gt, 1, 0), dtype=jnp.int32)
+    count_ref[0] += lt
+    count_ref[1] += eq
+    count_ref[2] += gt
+
+    below_ref[...] = _merge_below(below_ref[...],
+                                  jnp.where(is_lt, x, lo), cap_pad)
+    above_ref[...] = _merge_above(above_ref[...],
+                                  jnp.where(is_gt, x, hi), cap_pad)
+
+
+@functools.partial(jax.jit, static_argnames=("n_valid", "cap_pad",
+                                             "block_rows", "interpret"))
+def fused_select(x2d: jax.Array, pivot: jax.Array, *, n_valid: int,
+                 cap_pad: int, block_rows: int = DEFAULT_BLOCK_ROWS,
+                 interpret: bool = True):
+    """One streaming pass over the (rows, LANES) shard: returns
+    ``(counts, below, above)`` where counts is the int32 (lt, eq, gt)
+    triple, below is the (cap_pad,) largest values < pivot (descending,
+    -sentinel padded) and above the (cap_pad,) smallest values > pivot
+    (ascending, +sentinel padded).
+
+    VMEM per step: tile (block_rows*LANES) + 2 merge operands of
+    (block_rows*LANES + cap_pad) lanes — 128x1024 f32 tiles stay ~1.5 MiB,
+    comfortably double-bufferable in 16 MiB VMEM.
+    """
+    rows, lanes = x2d.shape
+    if lanes != LANES:
+        raise ValueError(f"expected trailing dim {LANES}, got {lanes}")
+    if cap_pad <= 0 or cap_pad % 128:
+        raise ValueError(f"cap_pad must be a positive multiple of 128, "
+                         f"got {cap_pad}")
+    block_rows = min(block_rows, rows)
+    grid = (pl.cdiv(rows, block_rows),)
+    kernel = functools.partial(_fused_kernel, n_valid=n_valid,
+                               block_rows=block_rows, cap_pad=cap_pad)
+    counts, below, above = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec(memory_space=pltpu.SMEM),
+            pl.BlockSpec((block_rows, LANES), lambda i: (i, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec(memory_space=pltpu.SMEM),
+            pl.BlockSpec((1, cap_pad), lambda i: (0, 0)),
+            pl.BlockSpec((1, cap_pad), lambda i: (0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((3,), jnp.int32),
+            jax.ShapeDtypeStruct((1, cap_pad), x2d.dtype),
+            jax.ShapeDtypeStruct((1, cap_pad), x2d.dtype),
+        ],
+        interpret=interpret,
+    )(pivot.reshape(1), x2d)
+    return counts, below[0], above[0]
+
+
+# ---------------------------------------------------------------------------
+# multi pivot: Q quantiles, one data pass
+# ---------------------------------------------------------------------------
+
+
+def _fused_multi_kernel(pivots_ref, x_ref, count_ref, below_ref, above_ref, *,
+                        n_valid: int, block_rows: int, cap_pad: int,
+                        num_pivots: int):
+    """The tile is resident in VMEM once; every pivot re-scores it.  Extra
+    pivots cost VPU compare/select work, never HBM reads."""
+    step = pl.program_id(0)
+    lo, hi = _sentinels(x_ref.dtype)
+
+    @pl.when(step == 0)
+    def _init():
+        for qi in range(num_pivots):
+            count_ref[qi, 0] = 0
+            count_ref[qi, 1] = 0
+            count_ref[qi, 2] = 0
+        below_ref[...] = jnp.full((num_pivots, cap_pad), lo, below_ref.dtype)
+        above_ref[...] = jnp.full((num_pivots, cap_pad), hi, above_ref.dtype)
+
+    x = x_ref[...]
+    valid = _valid_mask(x, step, block_rows, n_valid)
+
+    for qi in range(num_pivots):
+        pivot = pivots_ref[qi]
+        is_lt = valid & (x < pivot)
+        is_gt = valid & (x > pivot)
+        count_ref[qi, 0] += jnp.sum(jnp.where(is_lt, 1, 0), dtype=jnp.int32)
+        count_ref[qi, 1] += jnp.sum(jnp.where(valid & (x == pivot), 1, 0),
+                                    dtype=jnp.int32)
+        count_ref[qi, 2] += jnp.sum(jnp.where(is_gt, 1, 0), dtype=jnp.int32)
+        below_ref[qi:qi + 1, :] = _merge_below(
+            below_ref[qi:qi + 1, :], jnp.where(is_lt, x, lo), cap_pad)
+        above_ref[qi:qi + 1, :] = _merge_above(
+            above_ref[qi:qi + 1, :], jnp.where(is_gt, x, hi), cap_pad)
+
+
+@functools.partial(jax.jit, static_argnames=("n_valid", "cap_pad",
+                                             "block_rows", "interpret"))
+def fused_select_multi(x2d: jax.Array, pivots: jax.Array, *, n_valid: int,
+                       cap_pad: int, block_rows: int = DEFAULT_BLOCK_ROWS,
+                       interpret: bool = True):
+    """``fused_select`` against Q pivots in the same single data pass:
+    returns ``(counts (Q, 3), below (Q, cap_pad), above (Q, cap_pad))``."""
+    rows, lanes = x2d.shape
+    if lanes != LANES:
+        raise ValueError(f"expected trailing dim {LANES}, got {lanes}")
+    if cap_pad <= 0 or cap_pad % 128:
+        raise ValueError(f"cap_pad must be a positive multiple of 128, "
+                         f"got {cap_pad}")
+    num_pivots = int(pivots.shape[0])
+    block_rows = min(block_rows, rows)
+    grid = (pl.cdiv(rows, block_rows),)
+    kernel = functools.partial(_fused_multi_kernel, n_valid=n_valid,
+                               block_rows=block_rows, cap_pad=cap_pad,
+                               num_pivots=num_pivots)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec(memory_space=pltpu.SMEM),
+            pl.BlockSpec((block_rows, LANES), lambda i: (i, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec(memory_space=pltpu.SMEM),
+            pl.BlockSpec((num_pivots, cap_pad), lambda i: (0, 0)),
+            pl.BlockSpec((num_pivots, cap_pad), lambda i: (0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((num_pivots, 3), jnp.int32),
+            jax.ShapeDtypeStruct((num_pivots, cap_pad), x2d.dtype),
+            jax.ShapeDtypeStruct((num_pivots, cap_pad), x2d.dtype),
+        ],
+        interpret=interpret,
+    )(pivots, x2d)
+
+
+# ---------------------------------------------------------------------------
+# 256-bin byte histogram: the 4-pass radix-select primitive
+# ---------------------------------------------------------------------------
+
+HIST_BINS = 256
+_HIST_CHUNK_ROWS = 8   # rows one-hot-expanded at a time: 8*1024*256 i32 = 8 MiB
+
+
+def _byte_histogram_kernel(params_ref, u_ref, hist_ref, *, n_valid: int,
+                           block_rows: int, shift: int):
+    """Histogram of byte ``(u >> shift) & 0xFF`` over the elements whose
+    masked high bits equal the running prefix.
+
+    The 256 bins are accumulated by one-hot comparison against a bin iota,
+    a sublane chunk at a time so the expanded compare stays VMEM-sized;
+    counts live in the revisited (1, 256) output block.
+    """
+    step = pl.program_id(0)
+
+    @pl.when(step == 0)
+    def _init():
+        hist_ref[...] = jnp.zeros((1, HIST_BINS), jnp.int32)
+
+    u = u_ref[...]
+    prefix = params_ref[0]
+    mask = params_ref[1]
+    valid = _valid_mask(u, step, block_rows, n_valid)
+    match = valid & ((u & mask) == prefix)
+    byte = ((u >> jnp.uint32(shift)) & jnp.uint32(0xFF)).astype(jnp.int32)
+    byte = jnp.where(match, byte, -1)          # parked outside every bin
+
+    bins = jax.lax.broadcasted_iota(jnp.int32, (1, HIST_BINS), 1)
+    acc = jnp.zeros((1, HIST_BINS), jnp.int32)
+    rows = byte.shape[0]
+    for r0 in range(0, rows, _HIST_CHUNK_ROWS):
+        chunk = byte[r0:r0 + _HIST_CHUNK_ROWS].reshape(-1, 1)
+        acc += jnp.sum(jnp.where(chunk == bins, 1, 0), axis=0,
+                       dtype=jnp.int32, keepdims=True)
+    hist_ref[...] += acc
+
+
+@functools.partial(jax.jit, static_argnames=("n_valid", "shift",
+                                             "block_rows", "interpret"))
+def byte_histogram(u2d: jax.Array, prefix: jax.Array, mask: jax.Array, *,
+                   n_valid: int, shift: int,
+                   block_rows: int = DEFAULT_BLOCK_ROWS,
+                   interpret: bool = True) -> jax.Array:
+    """(256,) int32 histogram of the ``shift``-positioned byte among the
+    first ``n_valid`` elements matching ``(u & mask) == prefix``."""
+    rows, lanes = u2d.shape
+    if lanes != LANES:
+        raise ValueError(f"expected trailing dim {LANES}, got {lanes}")
+    if u2d.dtype != jnp.uint32:
+        raise TypeError(f"byte_histogram wants uint32, got {u2d.dtype}")
+    block_rows = min(block_rows, rows)
+    grid = (pl.cdiv(rows, block_rows),)
+    kernel = functools.partial(_byte_histogram_kernel, n_valid=n_valid,
+                               block_rows=block_rows, shift=shift)
+    params = jnp.stack([jnp.asarray(prefix, jnp.uint32),
+                        jnp.asarray(mask, jnp.uint32)])
+    hist = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec(memory_space=pltpu.SMEM),
+            pl.BlockSpec((block_rows, LANES), lambda i: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, HIST_BINS), lambda i: (0, 0)),
+        out_shape=jax.ShapeDtypeStruct((1, HIST_BINS), jnp.int32),
+        interpret=interpret,
+    )(params, u2d)
+    return hist[0]

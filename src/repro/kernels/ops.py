@@ -1,14 +1,25 @@
-"""jit'd wrappers around the Pallas kernels + the TPU-native QuickSelect.
+"""Dispatch wrappers around the Pallas kernels + the TPU-native selection.
 
-``count3`` / ``band_count``  — layout + dispatch (kernel vs jnp oracle).
-``radix_select_kth``         — exact k-th smallest with *zero* sorting:
-                               binary search over the sortable-uint transform
-                               of the value domain, one ``partition_count``
-                               pass per bit (<= 32 passes).  This is the
-                               hardware adaptation of the paper's executor
-                               QuickSelect: no in-place partitioning, no
-                               data-dependent branching — just streaming
-                               counts, which is what the VPU is good at.
+``count3`` / ``band_count``      — layout + dispatch (kernel vs jnp oracle).
+``fused_count_extract``          — the single-pass speculative round: one
+                                   HBM stream emits (lt, eq, gt) counts AND
+                                   both capped candidate bands (replaces the
+                                   count3 + 2x whole-array top_k trio).
+``fused_count_extract_multi``    — Q pivots answered by the same one pass.
+``byte_histogram``               — 256-bin histogram of one byte of the
+                                   sortable-u32 domain within a prefix group.
+``radix_select_kth``             — exact k-th smallest with *zero* sorting:
+                                   4 byte-histogram passes (8 bits/pass) over
+                                   the sortable-uint transform.  The
+                                   bit-at-a-time binary search it replaces is
+                                   kept as ``radix_select_kth_bitwise`` for
+                                   the pass-count benchmark (<= 32 passes).
+
+Every public wrapper here is a plain Python function that bumps the module
+HBM-pass counter once per full-array stream and then dispatches to a jitted
+kernel (or the jnp oracle).  The counter therefore counts *eager dispatches*
+— exactly what ``benchmarks/bench_fused.py`` measures; calls traced inside
+an outer jit tick once at trace time and are not the counter's job.
 
 On this CPU container kernels run under interpret=True; on TPU the same
 pallas_call compiles natively (set interpret=False via REPRO_PALLAS_NATIVE=1).
@@ -24,10 +35,33 @@ import jax.numpy as jnp
 from . import ref
 from .partition_count import LANES, partition_count
 from .band_count import band_count as _band_count_kernel
+from .fused_select import (fused_select, fused_select_multi,
+                           byte_histogram as _byte_histogram_kernel)
 
 
 def _interpret() -> bool:
     return os.environ.get("REPRO_PALLAS_NATIVE", "0") != "1"
+
+
+# ---------------------------------------------------------------------------
+# HBM pass accounting (the bandwidth-bound cost model; see DESIGN.md §2)
+# ---------------------------------------------------------------------------
+
+_HBM_PASSES = {"total": 0}
+
+
+def reset_hbm_passes() -> None:
+    """Zero the full-array streaming-pass counter."""
+    _HBM_PASSES["total"] = 0
+
+
+def hbm_passes() -> int:
+    """Full-array HBM streaming passes dispatched since the last reset."""
+    return _HBM_PASSES["total"]
+
+
+def _tick(n: int = 1) -> None:
+    _HBM_PASSES["total"] += n
 
 
 def pad_to_tiles(x: jax.Array) -> jax.Array:
@@ -41,9 +75,15 @@ def pad_to_tiles(x: jax.Array) -> jax.Array:
     return x.reshape(rows, LANES)
 
 
-@functools.partial(jax.jit, static_argnames=("use_pallas",))
+def _cap_pad(cap: int) -> int:
+    """Candidate-buffer lanes rounded to the VREG width (multiple of 128)."""
+    return max(128, -(-cap // 128) * 128)
+
+
 def count3(x: jax.Array, pivot: jax.Array, *, use_pallas: bool = True) -> jax.Array:
-    """(lt, eq, gt) of flat x vs pivot — kernel-backed ``local_ops.count3``."""
+    """(lt, eq, gt) of flat x vs pivot — kernel-backed ``local_ops.count3``.
+    One HBM pass."""
+    _tick()
     if not use_pallas:
         return ref.partition_count_ref(x.ravel(), pivot)
     x2d = pad_to_tiles(x)
@@ -51,10 +91,10 @@ def count3(x: jax.Array, pivot: jax.Array, *, use_pallas: bool = True) -> jax.Ar
                            interpret=_interpret())
 
 
-@functools.partial(jax.jit, static_argnames=("use_pallas",))
 def band_count(x: jax.Array, lo: jax.Array, hi: jax.Array, *,
                use_pallas: bool = True) -> jax.Array:
-    """#{ lo < x < hi } over the flat array."""
+    """#{ lo < x < hi } over the flat array.  One HBM pass."""
+    _tick()
     if not use_pallas:
         return ref.band_count_ref(x.ravel(), lo, hi)
     x2d = pad_to_tiles(x)
@@ -63,8 +103,65 @@ def band_count(x: jax.Array, lo: jax.Array, hi: jax.Array, *,
                               interpret=_interpret())
 
 
+def extract_below(x: jax.Array, pivot: jax.Array, cap: int) -> jax.Array:
+    """Unfused whole-array candidate extraction (one full HBM pass): the
+    ``cap`` largest values < pivot, descending, -sentinel padded.  Kept as
+    the pass-count benchmark's unfused baseline; the fused kernel replaces
+    it on the hot path."""
+    _tick()
+    return ref.block_topk_ref(x.ravel(), pivot, cap, largest_below=True)
+
+
+def extract_above(x: jax.Array, pivot: jax.Array, cap: int) -> jax.Array:
+    """Unfused whole-array extraction of the ``cap`` smallest values > pivot
+    (ascending, +sentinel padded).  One full HBM pass."""
+    _tick()
+    return ref.block_topk_ref(x.ravel(), pivot, cap, largest_below=False)
+
+
 # ---------------------------------------------------------------------------
-# sortable-uint transform + radix (bitwise binary-search) selection
+# fused single-pass band extraction
+# ---------------------------------------------------------------------------
+
+
+def fused_count_extract(x: jax.Array, pivot: jax.Array, cap: int, *,
+                        use_pallas: bool = True):
+    """The speculative GK Select round in ONE streaming pass: returns
+    ``(counts, below, above)`` with the exact semantics of
+    ``(local_ops.count3, local_ops.extract_below, local_ops.extract_above)``
+    — but the shard is read from HBM once instead of three times."""
+    if not use_pallas:
+        _tick(3)   # the jnp oracle really is count + 2x top_k streams
+        return ref.fused_select_ref(x.ravel(), pivot, cap)
+    _tick()
+    x2d = pad_to_tiles(x)
+    counts, below, above = fused_select(
+        x2d, jnp.asarray(pivot, x.dtype), n_valid=x.size,
+        cap_pad=_cap_pad(cap), interpret=_interpret())
+    return counts, below[:cap], above[:cap]
+
+
+def fused_count_extract_multi(x: jax.Array, pivots: jax.Array, cap: int, *,
+                              use_pallas: bool = True):
+    """``fused_count_extract`` against Q pivots in the same single pass:
+    ``(counts (Q, 3), below (Q, cap), above (Q, cap))``.  The unfused
+    pipeline costs 3 passes per pivot; this costs one total."""
+    if not use_pallas:
+        _tick(3 * int(pivots.shape[0]))   # oracle: 3 streams per pivot
+        outs = [ref.fused_select_ref(x.ravel(), p, cap) for p in pivots]
+        return (jnp.stack([o[0] for o in outs]),
+                jnp.stack([o[1] for o in outs]),
+                jnp.stack([o[2] for o in outs]))
+    _tick()
+    x2d = pad_to_tiles(x)
+    counts, below, above = fused_select_multi(
+        x2d, jnp.asarray(pivots, x.dtype), n_valid=x.size,
+        cap_pad=_cap_pad(cap), interpret=_interpret())
+    return counts, below[:, :cap], above[:, :cap]
+
+
+# ---------------------------------------------------------------------------
+# sortable-uint transform + radix (byte-histogram) selection
 # ---------------------------------------------------------------------------
 
 
@@ -90,22 +187,77 @@ def from_sortable_u32(u: jax.Array, dtype) -> jax.Array:
     return b.view(jnp.float32)
 
 
-@functools.partial(jax.jit, static_argnames=("use_pallas",))
-def radix_select_kth(x: jax.Array, k: jax.Array, *,
-                     use_pallas: bool = True) -> jax.Array:
-    """Exact k-th smallest (1-based, traced k) of a flat array, by <=32
-    streaming count passes — no sort, no top_k, no data movement."""
+def byte_histogram(x_or_u: jax.Array, prefix, mask, *, shift: int,
+                   use_pallas: bool = True) -> jax.Array:
+    """(256,) histogram of byte ``(u >> shift) & 0xFF`` among the uint32
+    elements matching ``(u & mask) == prefix``.  One HBM pass.  The input
+    must already be in the sortable-u32 domain."""
+    _tick()
+    u = x_or_u.ravel()
+    if u.dtype != jnp.uint32:
+        raise TypeError(f"byte_histogram wants sortable uint32, got {u.dtype}")
+    if not use_pallas:
+        return ref.byte_histogram_ref(u, prefix, mask, shift)
+    u2d = pad_to_tiles(u)
+    return _byte_histogram_kernel(u2d, jnp.asarray(prefix, jnp.uint32),
+                                  jnp.asarray(mask, jnp.uint32),
+                                  n_valid=u.size, shift=shift,
+                                  interpret=_interpret())
+
+
+RADIX_PASSES = 4   # 32 bits / 8 bits per byte-histogram pass
+
+
+def radix_select_kth(x: jax.Array, k, *, use_pallas: bool = True) -> jax.Array:
+    """Exact k-th smallest (1-based) of a flat array in exactly 4 streaming
+    histogram passes — no sort, no top_k, no data movement.
+
+    Each pass pins one byte of the answer: histogram the next byte within
+    the prefix group fixed so far, walk the cumulative counts to the bin
+    containing rank k, descend.  8 bits per pass -> 4 passes for uint32,
+    vs <= 32 for the bit-at-a-time binary search it replaces
+    (``radix_select_kth_bitwise``).
+
+    The win is HBM traffic (8x fewer full-array reads), which is the TPU
+    cost model; under CPU *interpret mode* the 256-bin one-hot histogram
+    is emulated compute and wall-clock is worse than the bitwise path —
+    see bench_fused — so benchmarking on this container should read the
+    pass counts, not the microseconds."""
     orig_dtype = x.dtype
     u = to_sortable_u32(x.ravel())
-    u2d = pad_to_tiles(u)
+    u2d = pad_to_tiles(u) if use_pallas else None
     n = u.size
     interp = _interpret()
 
+    prefix = jnp.uint32(0)
+    mask = jnp.uint32(0)
+    kk = jnp.asarray(k, jnp.int32)
+    for shift in (24, 16, 8, 0):
+        _tick()
+        if use_pallas:
+            hist = _byte_histogram_kernel(u2d, prefix, mask, n_valid=n,
+                                          shift=shift, interpret=interp)
+        else:
+            hist = ref.byte_histogram_ref(u, prefix, mask, shift)
+        csum = jnp.cumsum(hist)
+        byte = jnp.argmax(csum >= kk).astype(jnp.uint32)
+        kk = kk - (csum[byte] - hist[byte])
+        prefix = prefix | (byte << jnp.uint32(shift))
+        mask = mask | jnp.uint32(0xFF << shift)
+
+    out_dtype = jnp.int32 if orig_dtype == jnp.int32 else jnp.float32
+    val = from_sortable_u32(prefix, out_dtype)
+    return val.astype(orig_dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("n", "use_pallas", "interpret"))
+def _bitwise_inner(u2d: jax.Array, u_flat: jax.Array, k, *, n: int,
+                   use_pallas: bool, interpret: bool):
     def count_le(t):
         if use_pallas:
-            c = partition_count(u2d, t, n_valid=n, interpret=interp)
+            c = partition_count(u2d, t, n_valid=n, interpret=interpret)
         else:
-            c = ref.partition_count_ref(u, t)
+            c = ref.partition_count_ref(u_flat, t)
         return c[0] + c[1]
 
     def body(_, state):
@@ -118,10 +270,29 @@ def radix_select_kth(x: jax.Array, k: jax.Array, *,
 
     lo0 = jnp.uint32(0)
     hi0 = jnp.uint32(0xFFFFFFFF)
-    lo, hi = jax.lax.fori_loop(0, 32, body, (lo0, hi0))
+    lo, _ = jax.lax.fori_loop(0, 32, body, (lo0, hi0))
+    return lo
+
+
+def radix_select_kth_bitwise(x: jax.Array, k, *,
+                             use_pallas: bool = True) -> jax.Array:
+    """The pre-fused selection: bit-at-a-time binary search over the
+    sortable-u32 domain, one counting pass per bit (<= 32 passes).  Kept as
+    the benchmark baseline for the 4-pass byte-histogram select."""
+    _tick(32)
+    orig_dtype = x.dtype
+    u = to_sortable_u32(x.ravel())
+    u2d = pad_to_tiles(u)
+    lo = _bitwise_inner(u2d, u, jnp.asarray(k, jnp.int32), n=u.size,
+                        use_pallas=use_pallas, interpret=_interpret())
     out_dtype = jnp.int32 if orig_dtype == jnp.int32 else jnp.float32
     val = from_sortable_u32(lo, out_dtype)
-    return val.astype(orig_dtype if orig_dtype != jnp.bfloat16 else jnp.bfloat16)
+    return val.astype(orig_dtype)
+
+
+# ---------------------------------------------------------------------------
+# injection hooks for core.distributed / core.select
+# ---------------------------------------------------------------------------
 
 
 def make_count3_fn(use_pallas: bool = True):
@@ -129,4 +300,13 @@ def make_count3_fn(use_pallas: bool = True):
     local_ops.count3)."""
     def fn(x, pivot):
         return count3(x, pivot, use_pallas=use_pallas)
+    return fn
+
+
+def make_fused_fn(use_pallas: bool = True):
+    """fused_fn injection hook for ``gk_select_sharded``'s speculative
+    phase (same signature as ``local_ops.fused_count_extract``): the whole
+    count+extract round becomes one HBM stream per shard."""
+    def fn(x, pivot, cap):
+        return fused_count_extract(x, pivot, cap, use_pallas=use_pallas)
     return fn

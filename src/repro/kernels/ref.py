@@ -23,6 +23,28 @@ def band_count_ref(x: jax.Array, lo: jax.Array, hi: jax.Array) -> jax.Array:
     return jnp.sum((x > lo) & (x < hi), dtype=jnp.int32)
 
 
+def fused_select_ref(x: jax.Array, pivot: jax.Array, cap: int):
+    """Oracle for the single-pass fused band extraction
+    (``fused_select.fused_select``): the (lt, eq, gt) counts plus both
+    capped candidate buffers, as three whole-array passes."""
+    counts = partition_count_ref(x, pivot)
+    below = block_topk_ref(x, pivot, cap, largest_below=True)
+    above = block_topk_ref(x, pivot, cap, largest_below=False)
+    return counts, below, above
+
+
+def byte_histogram_ref(u: jax.Array, prefix: jax.Array, mask: jax.Array,
+                       shift: int) -> jax.Array:
+    """(256,) histogram of byte ``(u >> shift) & 0xFF`` over the uint32
+    elements whose masked high bits equal ``prefix``."""
+    u = u.ravel()
+    match = (u & jnp.uint32(mask)) == jnp.uint32(prefix)
+    byte = ((u >> jnp.uint32(shift)) & jnp.uint32(0xFF)).astype(jnp.int32)
+    byte = jnp.where(match, byte, -1)
+    bins = jnp.arange(256, dtype=jnp.int32)
+    return jnp.sum(byte[:, None] == bins[None, :], axis=0, dtype=jnp.int32)
+
+
 def block_topk_ref(x: jax.Array, pivot: jax.Array, cap: int,
                    largest_below: bool) -> jax.Array:
     """Per-shard candidate pre-selection oracle.

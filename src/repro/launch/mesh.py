@@ -15,17 +15,24 @@ from __future__ import annotations
 import jax
 
 
+def _mesh(shape, axes):
+    """jax.make_mesh across versions: axis_types only where it exists."""
+    if hasattr(jax.sharding, "AxisType"):
+        return jax.make_mesh(shape, axes,
+                             axis_types=(jax.sharding.AxisType.Auto,)
+                             * len(axes))
+    return jax.make_mesh(shape, axes)
+
+
 def make_production_mesh(*, multi_pod: bool = False):
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(shape, axes,
-                         axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+    return _mesh(shape, axes)
 
 
 def make_mesh(shape, axes):
     """Arbitrary mesh (tests use small host-device meshes)."""
-    return jax.make_mesh(tuple(shape), tuple(axes),
-                         axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+    return _mesh(tuple(shape), tuple(axes))
 
 
 def batch_axes(mesh) -> tuple:

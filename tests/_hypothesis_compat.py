@@ -1,0 +1,52 @@
+"""Optional-hypothesis shim: property tests degrade to explicit skips when
+``hypothesis`` is not installed, so the tier-1 suite always collects and the
+example-based tests still run.
+
+Usage (in test modules)::
+
+    from _hypothesis_compat import given, settings, st
+
+With hypothesis installed these ARE hypothesis's own ``given``/``settings``/
+``strategies``; without it, ``@given(...)`` replaces the test body with a
+``pytest.skip`` stub and ``st.*``/``settings`` become inert placeholders.
+"""
+try:
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    import pytest
+
+    HAVE_HYPOTHESIS = False
+
+    class _AnyStrategy:
+        """Accepts any strategy constructor call and returns a dummy."""
+
+        def __getattr__(self, name):
+            def strategy(*args, **kwargs):
+                return None
+            return strategy
+
+    st = _AnyStrategy()
+
+    def settings(*args, **kwargs):
+        def deco(fn):
+            return fn
+        return deco
+
+    def given(*args, **kwargs):
+        def deco(fn):
+            # Plain (self)/() signature so pytest doesn't try to resolve the
+            # property parameters as fixtures.  No functools.wraps: that
+            # would re-expose the original signature via __wrapped__.
+            import inspect
+            params = list(inspect.signature(fn).parameters)
+            if params and params[0] == "self":
+                def skipper(self):
+                    pytest.skip("hypothesis not installed")
+            else:
+                def skipper():
+                    pytest.skip("hypothesis not installed")
+            skipper.__name__ = getattr(fn, "__name__", "property_test")
+            skipper.__doc__ = fn.__doc__
+            return skipper
+        return deco

@@ -40,7 +40,8 @@ class TestDistributedQuantile:
                 k = min(n, max(1, int(np.ceil(q * n))))
                 want = flat[k - 1]
                 for kw in [dict(), dict(speculative=True),
-                           dict(reduce_strategy="all_gather")]:
+                           dict(reduce_strategy="all_gather"),
+                           dict(fused=True)]:
                     got = float(distributed_quantile(jnp.asarray(x), q, mesh,
                                                      **kw))
                     assert got == want, (q, kw, got, want)
@@ -107,22 +108,24 @@ class TestDistributedQuantile:
         out = run_sub("""
             from repro.launch import hlo_analysis
             import functools
-            from repro.core.distributed import gk_select_sharded, count_discard_sharded
+            from repro.core.distributed import (gk_select_sharded,
+                                                count_discard_sharded,
+                                                shard_map_compat)
             from jax.sharding import PartitionSpec as P
             n = 8 * 1024
             xs = jax.ShapeDtypeStruct((n,), jnp.float32)
             body = functools.partial(gk_select_sharded, q=0.5, eps=0.01,
                                      axis="data", num_shards=8)
-            f = jax.jit(jax.shard_map(body, mesh=mesh, in_specs=(P("data"),),
-                                      out_specs=P(), check_vma=False))
+            f = jax.jit(shard_map_compat(body, mesh=mesh, in_specs=(P("data"),),
+                                         out_specs=P()))
             hlo = f.lower(xs).compile().as_text()
             a = hlo_analysis.analyze(hlo)
             total_ops = sum(a["collective_counts"].values())
             assert 0 < total_ops <= 24, total_ops   # constant, small
             body2 = functools.partial(count_discard_sharded, q=0.5,
                                       axis="data", num_shards=8)
-            f2 = jax.jit(jax.shard_map(body2, mesh=mesh, in_specs=(P("data"),),
-                                       out_specs=P(), check_vma=False))
+            f2 = jax.jit(shard_map_compat(body2, mesh=mesh, in_specs=(P("data"),),
+                                          out_specs=P()))
             hlo2 = f2.lower(xs).compile().as_text()
             assert " while(" in hlo2   # O(log n) rounds live in a loop
             print("PHASES-OK", total_ops)

@@ -8,7 +8,7 @@ import numpy as np
 import jax
 import jax.numpy as jnp
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hypothesis_compat import given, settings, st
 
 from repro.core import (GKSketch, merge_fold_left, merge_tree,
                         local_sample_sketch, query_merged_sketch,

@@ -9,7 +9,7 @@ import numpy as np
 import jax
 import jax.numpy as jnp
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hypothesis_compat import given, settings, st
 
 from repro.checkpoint import latest_step, restore_checkpoint, save_checkpoint
 from repro.data import DataConfig, SyntheticPipeline, StreamStats
