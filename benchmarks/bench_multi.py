@@ -1,0 +1,100 @@
+"""Multi-quantile engine: one shared job vs Q separate jobs.
+
+Two sides of the claim (DESIGN.md §5):
+
+  * structural — the per-shard HBM pass count for the Q-pivot count+extract
+    phase is exactly 1 with the fused multi kernel vs 3Q for the unfused
+    per-pivot trio (`ops.hbm_passes`), with bit parity on every output;
+  * wall-clock — one `gk_select_multi` job (shared sketch + one fused pass
+    + one resolve batch) vs Q separate `gk_select` jobs, and the sharded
+    engine `distributed_quantile_multi` vs Q `distributed_quantile` calls
+    (1-device mesh on this container; trends, not TPU absolutes).
+
+Exactness is asserted against the sort oracle throughout — the speed story
+is only interesting because the answers stay bit-exact.
+"""
+import os
+import time
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ops
+
+
+def timed(fn, reps=3, warmup=True):
+    if warmup:
+        jax.block_until_ready(fn())
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        out = fn()
+    jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / reps * 1e6
+
+
+def run(csv_rows):
+    from repro.core import gk_select, gk_select_multi
+
+    smoke = os.environ.get("REPRO_BENCH_SMOKE", "0") == "1"
+    n = 2 ** 15 if smoke else 2 ** 19
+    Q = 5
+    rng = np.random.default_rng(0)
+    x = jnp.asarray(rng.normal(size=n).astype(np.float32))
+    qs = tuple(float(t) for t in np.linspace(0.1, 0.9, Q))
+    flat = np.sort(np.asarray(x))
+    wants = [flat[min(n, max(1, int(np.ceil(q * n)))) - 1] for q in qs]
+    cap = int(np.ceil(0.01 * n)) + 2
+    pivots = jnp.asarray(np.quantile(np.asarray(x), qs).astype(np.float32))
+
+    # ---- structural: per-shard HBM passes, Q pivots: 3Q -> 1 --------------
+    ops.reset_hbm_passes()
+    mc, mb, ma = ops.fused_count_extract_multi(x, pivots, cap)
+    jax.block_until_ready(mc)
+    fused_passes = ops.hbm_passes()
+    assert fused_passes == 1, fused_passes
+
+    ops.reset_hbm_passes()
+    for qi in range(Q):
+        c = ops.count3(x, pivots[qi])
+        b = ops.extract_below(x, pivots[qi], cap)
+        a = ops.extract_above(x, pivots[qi], cap)
+        assert (np.array_equal(mc[qi], c) and np.array_equal(mb[qi], b)
+                and np.array_equal(ma[qi], a)), f"pivot {qi} parity"
+    unfused_passes = ops.hbm_passes()
+    assert unfused_passes == 3 * Q, unfused_passes
+    csv_rows.append((f"multi/passes_{Q}pivots", str(fused_passes),
+                     f"unfused={unfused_passes} parity=True"))
+
+    # ---- wall-clock: one multi job vs Q single jobs (fused kernel path) ---
+    parts = x.reshape(8, -1)
+    got_multi = np.asarray(gk_select_multi(parts, qs, block_select=True))
+    assert list(got_multi) == wants, "multi job not exact"
+    got_single = [float(gk_select(parts, q, block_select=True)) for q in qs]
+    assert got_single == wants, "single jobs not exact"
+
+    us_multi = timed(lambda: gk_select_multi(parts, qs, block_select=True))
+    us_qjobs = timed(lambda: [gk_select(parts, q, block_select=True)
+                              for q in qs][-1])
+    csv_rows.append((f"multi/us_one_job_{Q}q", f"{us_multi:.0f}",
+                     f"{Q}_jobs={us_qjobs:.0f}us "
+                     f"speedup={us_qjobs / max(us_multi, 1e-9):.2f}x"))
+
+    # ---- sharded engine on a 1-device mesh: API-level one job vs Q jobs ---
+    from repro.core import distributed_quantile, distributed_quantile_multi
+    from repro.launch.mesh import make_mesh
+    mesh = make_mesh((1,), ("data",))
+    got_sh = np.asarray(distributed_quantile_multi(x, qs, mesh, fused=True))
+    assert list(got_sh) == wants, "sharded multi not exact"
+    # one cold rep, no warmup: interpret-mode shard_map re-traces per call so
+    # a warmup amortizes nothing and would double the slowest CI section
+    us_sh_multi = timed(
+        lambda: distributed_quantile_multi(x, qs, mesh, fused=True),
+        reps=1, warmup=False)
+    us_sh_qjobs = timed(
+        lambda: [distributed_quantile(x, q, mesh, fused=True)
+                 for q in qs][-1], reps=1, warmup=False)
+    csv_rows.append((f"multi/us_sharded_one_job_{Q}q", f"{us_sh_multi:.0f}",
+                     f"{Q}_jobs={us_sh_qjobs:.0f}us "
+                     f"speedup={us_sh_qjobs / max(us_sh_multi, 1e-9):.2f}x"))
+    return csv_rows

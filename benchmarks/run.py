@@ -18,7 +18,8 @@ sys.path.insert(0, _REPO)                       # `benchmarks` package
 sys.path.insert(0, os.path.join(_REPO, "src"))  # `repro` package
 
 from benchmarks import (bench_scaling, bench_distributions, bench_complexity,
-                        bench_rounds, bench_roofline, bench_fused)
+                        bench_rounds, bench_roofline, bench_fused,
+                        bench_multi)
 
 MODULES = [
     ("fig1_2_scaling", bench_scaling),
@@ -27,12 +28,14 @@ MODULES = [
     ("tab5_rounds", bench_rounds),
     ("roofline", bench_roofline),
     ("fused", bench_fused),
+    ("multi", bench_multi),
 ]
 
 # smoke: only the modules that honour REPRO_BENCH_SMOKE sizing and finish
 # in seconds on CPU (the shard_map/HLO modules spawn 8-device subprocesses).
 SMOKE_MODULES = [
     ("fused", bench_fused),
+    ("multi", bench_multi),
 ]
 
 

@@ -10,7 +10,8 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs import get_config
-from repro.launch.serve import calibrate_int8_scale, generate
+from repro.launch.serve import (calibrate_int8_scale, calibrate_int8_scales,
+                                generate)
 from repro.models import model
 
 cfg = get_config("h2o-danube-1.8b").reduced()
@@ -23,8 +24,10 @@ print("generated:", np.asarray(toks)[:2])
 
 # --- exact-quantile int8 calibration ----------------------------------------
 # collect activations from a calibration batch, then set the scale at the
-# exact p99.9 of |activation| — GK Select, not an approximation
-acts = jax.random.normal(jax.random.PRNGKey(2), (65536,)) * 0.25
+# exact p99.9 of |activation| — GK Select, not an approximation.  The odd
+# size exercises the +inf-sentinel pad + rank-addressed path (zero-padding
+# would corrupt the distribution).
+acts = (jax.random.normal(jax.random.PRNGKey(2), (65521,)) * 0.25)
 scale = calibrate_int8_scale(acts, q=0.999)
 oracle = np.sort(np.abs(np.asarray(acts)))[int(np.ceil(0.999 * acts.size)) - 1]
 print(f"int8 scale (exact p99.9) = {float(scale):.6f}  oracle={oracle:.6f}")
@@ -34,3 +37,14 @@ rec = q8.astype(jnp.float32) * scale / 127
 inside = jnp.abs(acts) <= scale
 err = jnp.abs(rec - acts)[inside].max()
 print(f"dequant max err (within scale): {float(err):.6f} <= {float(scale)/127:.6f}")
+
+# --- per-channel scales: ONE batched multi-quantile job ---------------------
+# C channels calibrated by a single vmapped GK Select dispatch instead of C
+# separate exact_quantile jobs (the Spark one-job-per-quantile regression)
+ch_acts = jax.random.normal(jax.random.PRNGKey(3), (8191, 6)) * \
+    jnp.linspace(0.1, 0.6, 6)
+scales = calibrate_int8_scales(ch_acts, axis=-1, q=0.999)
+kc = int(np.ceil(0.999 * ch_acts.shape[0]))
+ch_oracle = np.sort(np.abs(np.asarray(ch_acts)), axis=0)[kc - 1, :]
+print("per-channel scales:", np.asarray(scales).round(4))
+assert np.array_equal(np.asarray(scales), ch_oracle)

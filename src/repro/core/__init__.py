@@ -10,23 +10,26 @@ Public API:
 from .sketch import (GKSketch, merge_fold_left, merge_tree,
                      local_sample_sketch, query_merged_sketch,
                      sample_sketch_params)
-from .select import exact_quantile, gk_select, gk_select_multi
+from .select import (exact_quantile, exact_quantile_rank, gk_select,
+                     gk_select_multi)
 from .baselines import (full_sort_quantile, psrs_sort, afs_select,
                         jeffers_select, approx_quantile, count_discard_rounds)
-from .distributed import (distributed_quantile, gk_select_sharded,
+from .distributed import (distributed_quantile, distributed_quantile_multi,
+                          gk_select_sharded, gk_select_multi_sharded,
                           approx_quantile_sharded, count_discard_sharded,
                           full_sort_sharded, tree_reduce_candidates,
-                          shard_map_compat)
+                          gather_candidates, shard_map_compat)
 from . import local_ops
 
 __all__ = [
     "GKSketch", "merge_fold_left", "merge_tree", "local_sample_sketch",
     "query_merged_sketch", "sample_sketch_params",
-    "exact_quantile", "gk_select", "gk_select_multi",
+    "exact_quantile", "exact_quantile_rank", "gk_select", "gk_select_multi",
     "full_sort_quantile", "psrs_sort", "afs_select", "jeffers_select",
     "approx_quantile", "count_discard_rounds",
-    "distributed_quantile", "gk_select_sharded", "approx_quantile_sharded",
-    "count_discard_sharded", "full_sort_sharded", "tree_reduce_candidates",
-    "shard_map_compat",
+    "distributed_quantile", "distributed_quantile_multi",
+    "gk_select_sharded", "gk_select_multi_sharded",
+    "approx_quantile_sharded", "count_discard_sharded", "full_sort_sharded",
+    "tree_reduce_candidates", "gather_candidates", "shard_map_compat",
     "local_ops",
 ]

@@ -5,15 +5,22 @@ Spark roles map to SPMD collectives (DESIGN.md §2):
   collect sketches       -> lax.all_gather   (replicated merge, no driver)
   TorrentBroadcast pivot -> free (pivot computed replicated post-gather)
   collect counts         -> lax.psum
-  treeReduce candidates  -> log2(P) lax.ppermute butterfly, re-selecting the
-                            cap best at each step (paper's reduceSlices), or a
-                            single capped all_gather (strategy="all_gather")
+  treeReduce candidates  -> <= log2(P)+2 lax.ppermute butterfly generalized
+                            to ANY shard count (fold/butterfly/broadcast,
+                            DESIGN.md §5), re-selecting the cap best at each
+                            step (paper's reduceSlices), or a single capped
+                            all_gather (strategy="all_gather")
 
 The faithful variant keeps the paper's 3 data-dependent collective phases and
 its one-sided extraction volume (the side is folded in by sign-negation so
 shapes stay static; see DESIGN.md "Static shapes").  ``speculative=True`` is
 the beyond-paper 2-phase variant: both sides are extracted alongside the
 count, removing the sign dependency, at 2x extraction bytes (still O(eps*n)).
+
+``gk_select_multi_sharded`` / ``distributed_quantile_multi`` widen every
+phase to a static tuple of Q quantile levels — one sketch, one (optionally
+fused single-HBM-pass) count+extract, one butterfly for all Q candidate
+buffers — where Spark would run Q separate jobs (DESIGN.md §5).
 """
 from __future__ import annotations
 
@@ -53,29 +60,74 @@ def shard_map_compat(body, *, mesh, in_specs, out_specs):
 
 def tree_reduce_candidates(buf: jax.Array, axis: str, num_shards: int,
                            keep_largest: bool) -> jax.Array:
-    """Butterfly (recursive-halving) reduction of a fixed-capacity candidate
-    buffer: log2(P) ppermute steps; every step merges two buffers and keeps
-    the ``cap`` best. All shards end with the globally-best cap candidates.
+    """Butterfly reduction of a fixed-capacity candidate buffer, generalized
+    to ARBITRARY shard counts: every step merges two buffers along the last
+    axis and keeps the ``cap`` best; all shards end with the globally-best
+    cap candidates.  Leading axes (e.g. the Q quantiles of the multi engine)
+    ride along — one butterfly reduces all of them.
 
-    The globally best cap values always survive: each step's kept set is a
-    superset of the intersection of the global best with the pair's union.
+    A plain XOR butterfly ``(i, i ^ d)`` only works when P is a power of two
+    (for P=120 it indexes shards out of range).  For general P the reduction
+    runs in three stages over p2 = the largest power of two <= P (DESIGN.md
+    §5):
+
+      1. fold: the r = P - p2 extra shards send their buffers to shards
+         0..r-1, which merge them in;
+      2. butterfly: log2(p2) XOR ppermute steps over shards 0..p2-1 — shards
+         >= p2 receive nothing and mask the incoming zeros to sentinels;
+      3. broadcast: shards 0..r-1 return the fully-reduced buffer to the
+         extra shards.
+
+    log2(p2) + 2 ppermutes total; for power-of-two P this is exactly the
+    old butterfly.  The globally best cap values always survive: each kept
+    set is a superset of the intersection of the global best with the
+    merged pair's union.
     """
     cap = buf.shape[-1]
-    for j in range(int(math.log2(num_shards)) if num_shards > 1 else 0):
-        d = 1 << j
-        perm = [(i, i ^ d) for i in range(num_shards)]
-        other = jax.lax.ppermute(buf, axis, perm)
-        both = jnp.concatenate([buf, other], axis=-1)
+    if num_shards <= 1:
+        return buf
+    lo, hi = local_ops._sentinels(buf.dtype)
+    sentinel = lo if keep_largest else hi
+
+    def merge(a, b):
+        both = jnp.concatenate([a, b], axis=-1)
         if keep_largest:
-            buf = jax.lax.top_k(both, cap)[0]
-        else:
-            buf = -jax.lax.top_k(-both, cap)[0]
+            return jax.lax.top_k(both, cap)[0]
+        return -jax.lax.top_k(-both, cap)[0]
+
+    p2 = 1 << (num_shards.bit_length() - 1)   # largest power of two <= P
+    r = num_shards - p2
+    me = jax.lax.axis_index(axis)
+    sent_buf = jnp.full(buf.shape, sentinel, buf.dtype)
+
+    if r:
+        # fold the r extra shards into shards 0..r-1 (non-destinations
+        # receive zeros from ppermute — mask them to identity sentinels)
+        other = jax.lax.ppermute(buf, axis, [(p2 + i, i) for i in range(r)])
+        buf = merge(buf, jnp.where(me < r, other, sent_buf))
+
+    for j in range(int(math.log2(p2))):
+        d = 1 << j
+        other = jax.lax.ppermute(buf, axis,
+                                 [(i, i ^ d) for i in range(p2)])
+        if r:
+            other = jnp.where(me < p2, other, sent_buf)
+        buf = merge(buf, other)
+
+    if r:
+        # hand the reduced buffer back to the extra shards
+        other = jax.lax.ppermute(buf, axis, [(i, p2 + i) for i in range(r)])
+        buf = jnp.where(me >= p2, other, buf)
     return buf
 
 
 def gather_candidates(buf: jax.Array, axis: str) -> jax.Array:
-    """Flat all_gather alternative (Jeffers-style collect): O(cap*P) volume."""
-    return jax.lax.all_gather(buf, axis).reshape(-1)
+    """Flat all_gather alternative (Jeffers-style collect): O(cap*P) volume.
+    Leading axes are preserved; only the candidate (last) axis is merged
+    across shards, so a (Q, cap) buffer gathers to (Q, P*cap)."""
+    g = jax.lax.all_gather(buf, axis)       # (P, *buf.shape)
+    g = jnp.moveaxis(g, 0, -2)              # (*lead, P, cap)
+    return g.reshape(*g.shape[:-2], -1)
 
 
 # ---------------------------------------------------------------------------
@@ -105,6 +157,25 @@ def gk_select_sharded(x_local: jax.Array, *, q: float, eps: float, axis: str,
     ex_below = extract_fns[0] if extract_fns else local_ops.extract_below
     ex_above = extract_fns[1] if extract_fns else local_ops.extract_above
 
+    if speculative or fused_fn is not None:
+        # The speculative round is exactly the Q=1 case of the multi engine:
+        # delegate (one data flow to maintain), adapting any injected
+        # single-pivot seams to the multi signatures.
+        multi_fused = None
+        if fused_fn is not None:
+            def multi_fused(x, pivots, cap_):
+                c, b, a = fused_fn(x, pivots[0], cap_)
+                return c[None], b[None], a[None]
+
+        def count_extract(x, pivot_, cap_):
+            return (count3(x, pivot_), ex_below(x, pivot_, cap_),
+                    ex_above(x, pivot_, cap_))
+
+        return gk_select_multi_sharded(
+            x_local, qs=(q,), eps=eps, axis=axis, num_shards=num_shards,
+            reduce_strategy=reduce_strategy, fused_fn=multi_fused,
+            count_extract_fn=count_extract)[0]
+
     # ---- Phase 1: local sketch -> all_gather -> replicated merge+query ----
     m, s = sample_sketch_params(n, n_local, eps, num_shards)
     vals, weights = local_sample_sketch(x_local, m, s)
@@ -113,23 +184,6 @@ def gk_select_sharded(x_local: jax.Array, *, q: float, eps: float, axis: str,
     pivot = query_merged_sketch(g_vals, g_wts, k, num_shards, m)
 
     cap = local_ops.candidate_cap(n, eps, n_local)
-
-    if speculative or fused_fn is not None:
-        # ---- Phase 2 (fused): counts psum + two-sided candidate reduce ----
-        if fused_fn is not None:
-            c_local, below, above = fused_fn(x_local, pivot, cap)
-            counts = jax.lax.psum(c_local, axis)
-        else:
-            counts = jax.lax.psum(count3(x_local, pivot), axis)
-            below = ex_below(x_local, pivot, cap)
-            above = ex_above(x_local, pivot, cap)
-        if reduce_strategy == "tree":
-            below = tree_reduce_candidates(below, axis, num_shards, keep_largest=True)
-            above = tree_reduce_candidates(above, axis, num_shards, keep_largest=False)
-        else:
-            below = gather_candidates(below, axis)
-            above = gather_candidates(above, axis)
-        return local_ops.resolve(pivot, k, counts[0], counts[1], below, above, cap)
 
     # ---- Phase 2: counts -> Delta_k ----
     counts = jax.lax.psum(count3(x_local, pivot), axis)
@@ -154,6 +208,69 @@ def gk_select_sharded(x_local: jax.Array, *, q: float, eps: float, axis: str,
     return jnp.where((need_left <= 0) & (need_right <= 0), pivot, side_val)
 
 
+def gk_select_multi_sharded(x_local: jax.Array, *, qs: Sequence[float],
+                            eps: float, axis: str, num_shards: int,
+                            reduce_strategy: str = "tree",
+                            fused_fn=None, count_extract_fn=None) -> jax.Array:
+    """Q quantiles from ONE sharded job (the multi-quantile production
+    engine; DESIGN.md §5).  ``qs`` is a static tuple of quantile levels;
+    returns the (Q,) exact values, replicated on every shard.
+
+    Spark answers Q quantiles with Q jobs, re-reading the data 3Q times.
+    Here the whole job shares one data flow:
+
+      * ONE sketch phase — a single all_gather'd summary is queried for all
+        Q target ranks (pivots are a (Q,) vector);
+      * ONE count+extract phase — ``fused_fn`` (the multi-pivot Pallas
+        kernel ``kernels.ops.fused_count_extract_multi``, signature
+        ``(x, pivots, cap) -> (counts (Q,3), below (Q,cap), above
+        (Q,cap))``) streams the shard from HBM once for every pivot; the
+        jnp fallback vmaps ``count_extract_fn`` (single-pivot seam,
+        default ``local_ops.fused_count_extract`` — 3 streams per pivot);
+      * ONE reduction phase — the (Q, cap) candidate buffers ride a single
+        butterfly (``tree_reduce_candidates`` reduces the last axis and
+        carries leading axes along), so the collective count does not grow
+        with Q.
+    """
+    n_local = x_local.shape[0]
+    n = n_local * num_shards
+    ks = jnp.array([local_ops.target_rank(n, q) for q in qs], jnp.int32)
+
+    # ---- Phase 1: one shared sketch, queried for all Q ranks ----
+    m, s = sample_sketch_params(n, n_local, eps, num_shards)
+    vals, weights = local_sample_sketch(x_local, m, s)
+    g_vals = jax.lax.all_gather(vals, axis).reshape(-1)
+    g_wts = jax.lax.all_gather(weights, axis).reshape(-1)
+    pivots = jax.vmap(
+        lambda k: query_merged_sketch(g_vals, g_wts, k, num_shards, m))(ks)
+
+    cap = local_ops.candidate_cap(n, eps, n_local)
+
+    # ---- Phase 2: one pass (fused) over the shard for all Q pivots ----
+    if fused_fn is not None:
+        c_local, below, above = fused_fn(x_local, pivots, cap)
+    else:
+        one = count_extract_fn or local_ops.fused_count_extract
+        c_local, below, above = jax.vmap(
+            lambda p: one(x_local, p, cap))(pivots)
+    counts = jax.lax.psum(c_local, axis)              # (Q, 3)
+
+    # ---- Phase 3: one butterfly for all Q candidate buffers ----
+    if reduce_strategy == "tree":
+        below = tree_reduce_candidates(below, axis, num_shards,
+                                       keep_largest=True)
+        above = tree_reduce_candidates(above, axis, num_shards,
+                                       keep_largest=False)
+    else:
+        below = gather_candidates(below, axis)        # (Q, P*cap)
+        above = gather_candidates(above, axis)
+
+    def resolve_one(pivot, k, c, b, a):
+        return local_ops.resolve(pivot, k, c[0], c[1], b, a, cap)
+
+    return jax.vmap(resolve_one)(pivots, ks, counts, below, above)
+
+
 # ---------------------------------------------------------------------------
 # Baselines (shard_map bodies)
 # ---------------------------------------------------------------------------
@@ -174,10 +291,17 @@ def approx_quantile_sharded(x_local: jax.Array, *, q: float, eps: float,
 
 def _pmax_pair(priority: jax.Array, value: jax.Array, axis: str):
     """Value attached to the max priority across the axis (distributed
-    reservoir pick): two pmaxes, tie-free for continuous priorities."""
+    reservoir pick), dtype-safe: the owner is the lowest rank holding the
+    max priority and its value travels through a one-hot psum.  The old
+    float32/-inf masking round-trip rounded int32/float64 values with
+    magnitude > 2^24; the one-hot sum (value + P-1 zeros) is bit-exact for
+    every dtype."""
     gp = jax.lax.pmax(priority, axis)
-    masked = jnp.where(priority == gp, value, -jnp.inf)
-    return jax.lax.pmax(masked, axis)
+    me = jax.lax.axis_index(axis)
+    owner = jax.lax.pmin(jnp.where(priority == gp, me, jnp.int32(1 << 30)),
+                         axis)
+    return jax.lax.psum(jnp.where(me == owner, value, jnp.zeros_like(value)),
+                        axis)
 
 
 def count_discard_sharded(x_local: jax.Array, *, q: float, axis: str,
@@ -185,7 +309,18 @@ def count_discard_sharded(x_local: jax.Array, *, q: float, axis: str,
                           collect_counts: bool = False) -> jax.Array:
     """AFS (collect_counts=False: psum ~ treeReduce) / Jeffers
     (collect_counts=True: all_gather ~ collect) — O(log n) rounds, one
-    collective phase per round inside a while_loop."""
+    collective phase per round inside a while_loop.
+
+    Candidates are drawn strictly inside the open band (lo, hi), so values
+    equal to a dtype extreme (int32 min/max, +-inf) can never be picked as
+    pivots.  When the target lands on such a value the band empties; the
+    loop detects that and terminates on the boundary whose side rank says
+    holds rank k — instead of spinning on an arbitrary all-inactive pick
+    until max_rounds.  The band population is derived from carried rank
+    masses (``n_le_lo`` = #{x <= lo}, ``n_lt_hi`` = #{x < hi}, both
+    updatable from the counts already collected each round), so detection
+    adds no per-round collective.
+    """
     n_local = x_local.shape[0]
     n = n_local * num_shards
     k = local_ops.target_rank(n, q)
@@ -198,37 +333,54 @@ def count_discard_sharded(x_local: jax.Array, *, q: float, axis: str,
         active = (x_local > lo_) & (x_local < hi_)
         pri = jnp.where(active, pri, -1.0)
         i = jnp.argmax(pri)
-        return _pmax_pair(pri[i], x_local[i].astype(jnp.float32), axis)
+        return _pmax_pair(pri[i], x_local[i], axis)
+
+    # elements equal to a sentinel boundary are never active; count them once
+    # (one stacked psum) so an emptied band resolves to the right boundary
+    c_lo = local_ops.count3(x_local, lo)
+    c_hi = local_ops.count3(x_local, hi)
+    sums = jax.lax.psum(jnp.stack([c_lo[0] + c_lo[1], c_hi[0]]), axis)
+    n_le_lo0, n_lt_hi0 = sums[0], sums[1]
 
     key0, sub = jax.random.split(base)
-    pivot0 = candidate(lo, hi, sub).astype(x_local.dtype)
+    pivot0 = candidate(lo, hi, sub)
 
     def cond(st):
-        done, rounds = st[3], st[5]
+        done, rounds = st[5], st[7]
         return (~done) & (rounds < max_rounds)
 
     def body(st):
-        lo_, hi_, pivot, done, ans, rounds, key = st
+        lo_, hi_, pivot, n_le_lo, n_lt_hi, done, ans, rounds, key = st
+        empty = (n_lt_hi - n_le_lo) == 0
+        boundary = jnp.where(k <= n_le_lo, lo_, hi_)
         c = local_ops.count3(x_local, pivot)
         if collect_counts:
-            counts = jax.lax.all_gather(c, axis).sum(0)
+            # dtype pinned: under x64, sum(int32) would promote the loop
+            # carry to int64 and break the while_loop's carry contract
+            counts = jax.lax.all_gather(c, axis).sum(0, dtype=jnp.int32)
         else:
             counts = jax.lax.psum(c, axis)
         lt, eq = counts[0], counts[1]
-        found = (lt < k) & (k <= lt + eq)
+        found = (~empty) & (lt < k) & (k <= lt + eq)
         go_left = k <= lt
         lo2 = jnp.where(go_left, lo_, pivot)
         hi2 = jnp.where(go_left, pivot, hi_)
+        n_le_lo2 = jnp.where(go_left, n_le_lo, lt + eq)
+        n_lt_hi2 = jnp.where(go_left, lt, n_lt_hi)
         key2, sub2 = jax.random.split(key)
-        nxt = candidate(lo2, hi2, sub2).astype(x_local.dtype)
-        return (jnp.where(found, lo_, lo2), jnp.where(found, hi_, hi2),
-                jnp.where(found, pivot, nxt), done | found,
-                jnp.where(found, pivot, ans), rounds + 1, key2)
+        nxt = candidate(lo2, hi2, sub2)
+        hit = found | empty
+        return (jnp.where(hit, lo_, lo2), jnp.where(hit, hi_, hi2),
+                jnp.where(hit, pivot, nxt),
+                jnp.where(hit, n_le_lo, n_le_lo2),
+                jnp.where(hit, n_lt_hi, n_lt_hi2), done | hit,
+                jnp.where(empty, boundary, jnp.where(found, pivot, ans)),
+                rounds + 1, key2)
 
-    st0 = (lo, hi, pivot0, jnp.array(False), pivot0,
+    st0 = (lo, hi, pivot0, n_le_lo0, n_lt_hi0, jnp.array(False), pivot0,
            jnp.array(0, jnp.int32), key0)
     st = jax.lax.while_loop(cond, body, st0)
-    return st[4]
+    return st[6]
 
 
 def full_sort_sharded(x_local: jax.Array, *, q: float, axis: str,
@@ -252,7 +404,9 @@ def full_sort_sharded(x_local: jax.Array, *, q: float, axis: str,
     stride = max(1, n_local // r)
     samples = xs[::stride][:r]
     all_samples = jnp.sort(jax.lax.all_gather(samples, axis).reshape(-1))
-    step = all_samples.size // num_shards
+    # r >= 1 so the gathered sample count is >= num_shards, but guard the
+    # stride anyway: step == 0 would make the splitter slice a wrap-around
+    step = max(1, all_samples.size // num_shards)
     splitters = all_samples[step::step][: num_shards - 1]
 
     # bucket & pack into capacity lanes per destination
@@ -274,7 +428,6 @@ def full_sort_sharded(x_local: jax.Array, *, q: float, axis: str,
     recv = jax.lax.all_to_all(send, axis, split_axis=0, concat_axis=0,
                               tiled=False)
     recv = recv.reshape(-1)
-    my_count = jax.lax.psum(sent, axis)[jax.lax.axis_index(axis)]
     local_sorted = jnp.sort(recv)  # sentinels sort last
 
     # exact rank bookkeeping: ranks below my bucket
@@ -284,8 +437,14 @@ def full_sort_sharded(x_local: jax.Array, *, q: float, axis: str,
     k_local = k - below[mine]
     have = (k_local >= 1) & (k_local <= counts_all[mine])
     val = local_sorted[jnp.clip(k_local - 1, 0, recv.size - 1)]
-    contrib = jnp.where(have, val.astype(jnp.float32), -jnp.inf)
-    return jax.lax.pmax(contrib, axis).astype(x_local.dtype)
+    # exactly one shard owns rank k; a one-hot psum ships its value without
+    # the float32/-inf round-trip that rounded wide int32/float64 answers.
+    # If capacity overflow dropped rank k entirely (pathological skew), no
+    # shard owns it — surface the high sentinel, not a plausible-looking 0.
+    contrib = jnp.where(have, val, jnp.zeros_like(val))
+    out = jax.lax.psum(contrib, axis)
+    owned = jax.lax.psum(have.astype(jnp.int32), axis)
+    return jnp.where(owned > 0, out, hi)
 
 
 # ---------------------------------------------------------------------------
@@ -335,4 +494,36 @@ def distributed_quantile(x: jax.Array, q: float, mesh: Mesh, *,
     body = bodies[method]
     spec = P(axis)
     fn = shard_map_compat(body, mesh=mesh, in_specs=(spec,), out_specs=P())
+    return fn(x)
+
+
+def distributed_quantile_multi(x: jax.Array, qs: Sequence[float], mesh: Mesh,
+                               *, axis: str = "data", eps: float = 0.01,
+                               reduce_strategy: str = "tree",
+                               fused: bool = False) -> jax.Array:
+    """Exact quantiles at ALL the (static) levels in ``qs`` from one sharded
+    job: one sketch phase, one count+extract pass per shard (fused=True
+    streams the shard from HBM once for every pivot via the multi-pivot
+    Pallas kernel — 3Q passes -> 1), one butterfly for all Q candidate
+    buffers.  Returns the (Q,) values, replicated.  Works on any shard
+    count, power of two or not."""
+    num_shards = mesh.shape[axis]
+    qs = tuple(float(q) for q in qs)
+    if not qs:
+        raise ValueError("qs must name at least one quantile level")
+    if x.ndim != 1:
+        raise ValueError("distributed_quantile_multi expects a flat array")
+    if x.size % num_shards:
+        raise ValueError(f"size {x.size} % shards {num_shards} != 0 — pad first")
+
+    fused_fn = None
+    if fused:
+        from ..kernels.ops import make_fused_multi_fn   # lazy: kernels optional
+        fused_fn = make_fused_multi_fn()
+
+    body = functools.partial(gk_select_multi_sharded, qs=qs, eps=eps,
+                             axis=axis, num_shards=num_shards,
+                             reduce_strategy=reduce_strategy,
+                             fused_fn=fused_fn)
+    fn = shard_map_compat(body, mesh=mesh, in_specs=(P(axis),), out_specs=P())
     return fn(x)

@@ -23,6 +23,25 @@ def _sentinels(dtype):
     return jnp.array(info.min, dtype), jnp.array(info.max, dtype)
 
 
+def pad_with_high_sentinel(x: jax.Array, multiple: int, *,
+                           axis: int = -1) -> jax.Array:
+    """Pad ``axis`` up to a multiple of ``multiple`` lanes with the dtype's
+    highest total-order sentinel (+inf / int max).
+
+    Top-sentinel padding never disturbs the k-th smallest for any
+    k <= n_true (pads tie at-or-above the maximum, and tied ranks resolve
+    to the same value) — unlike zero padding, which inserts mass in the
+    middle of the distribution and corrupts every rank above the zeros.
+    """
+    pad = (-x.shape[axis]) % multiple
+    if pad:
+        _, hi = _sentinels(x.dtype)
+        shape = list(x.shape)
+        shape[axis] = pad
+        x = jnp.concatenate([x, jnp.full(shape, hi, x.dtype)], axis=axis)
+    return x
+
+
 def count3(x: jax.Array, pivot: jax.Array) -> jax.Array:
     """Dutch 3-way counts (lt, eq, gt) of one shard vs the pivot.
 

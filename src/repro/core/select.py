@@ -36,13 +36,20 @@ def _pivot_from_sample_sketch(parts: jax.Array, k: jax.Array, eps: float) -> jax
     return query_merged_sketch(vals.ravel(), weights.ravel(), k, P, m)
 
 
-@functools.partial(jax.jit, static_argnames=("q", "eps", "speculative", "block_select"))
+@functools.partial(jax.jit, static_argnames=("q", "eps", "speculative",
+                                             "block_select", "k"))
 def gk_select(parts: jax.Array, q: float, *, eps: float = 0.01,
-              speculative: bool = False, block_select: bool = False) -> jax.Array:
+              speculative: bool = False, block_select: bool = False,
+              k: int = None) -> jax.Array:
     """Exact q-quantile (k = ceil(q*n), 1-based) of a (P, n_i) partitioned array.
 
     Exactness does not depend on eps; eps only sizes the sketch and the
     candidate buffers (|Delta_k| <= eps*n by the sketch guarantee).
+
+    ``k`` (static, 1-based) addresses the target by rank directly and
+    overrides ``q`` (pass q=None) — the entry sentinel-padded callers need:
+    with +inf padding, ``q * n_padded`` lies about the true target rank
+    while a rank on the unpadded count stays exact.
 
     ``block_select=True`` routes the count+extract work through the fused
     Pallas band-extraction kernel (``kernels.ops.fused_count_extract``):
@@ -51,7 +58,8 @@ def gk_select(parts: jax.Array, q: float, *, eps: float = 0.01,
     """
     P, n_i = parts.shape
     n = P * n_i
-    k = jnp.int32(local_ops.target_rank(n, q))
+    rank = local_ops.target_rank(n, q) if k is None else int(min(n, max(1, k)))
+    k = jnp.int32(rank)
 
     # ---- Round 1: sketch + merged pivot (Steps 1-3) ----
     pivot = _pivot_from_sample_sketch(parts, k, eps)
@@ -112,6 +120,23 @@ def exact_quantile(x: jax.Array, q: float, *, eps: float = 0.01,
         raise ValueError(f"size {n} not divisible by P={num_partitions}")
     parts = x.reshape(num_partitions, n // num_partitions)
     return gk_select(parts, q, eps=eps)
+
+
+@functools.partial(jax.jit, static_argnames=("k", "eps", "num_partitions"))
+def exact_quantile_rank(x: jax.Array, k: int, *, eps: float = 0.01,
+                        num_partitions: int = 8) -> jax.Array:
+    """Rank-addressed ``exact_quantile``: the k-th smallest (1-based) element
+    of the flat array.  Sentinel-padding callers (calibration) compute
+    k = ceil(q * n_true) on the TRUE element count and pad with +inf, which
+    never disturbs ranks <= n_true — unlike zero-padding, which inflates n
+    and shifts every quantile."""
+    n = x.size
+    if n % num_partitions:
+        raise ValueError(f"size {n} not divisible by P={num_partitions}")
+    if not 1 <= k <= n:
+        raise ValueError(f"rank k={k} outside [1, {n}]")
+    parts = x.reshape(num_partitions, n // num_partitions)
+    return gk_select(parts, None, k=int(k), eps=eps)
 
 
 @functools.partial(jax.jit, static_argnames=("qs", "eps", "speculative",

@@ -310,3 +310,12 @@ def make_fused_fn(use_pallas: bool = True):
     def fn(x, pivot, cap):
         return fused_count_extract(x, pivot, cap, use_pallas=use_pallas)
     return fn
+
+
+def make_fused_multi_fn(use_pallas: bool = True):
+    """fused_fn injection hook for ``gk_select_multi_sharded``: the whole
+    Q-pivot count+extract phase becomes ONE HBM stream per shard
+    (``(x, pivots, cap) -> (counts (Q,3), below (Q,cap), above (Q,cap))``)."""
+    def fn(x, pivots, cap):
+        return fused_count_extract_multi(x, pivots, cap, use_pallas=use_pallas)
+    return fn

@@ -17,20 +17,37 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs import get_config
-from repro.core import exact_quantile
+from repro.core import exact_quantile_rank, local_ops
 from repro.models import model
 from repro.models.config import ModelConfig
+from repro.optim.quantile_ops import channelwise_exact_quantile
 
 
 def calibrate_int8_scale(activations: jax.Array, q: float = 0.999,
                          num_partitions: int = 8) -> jax.Array:
     """Exact q-quantile |activation| -> symmetric int8 scale.  Deterministic
-    across runs and cluster sizes (the paper's reproducibility case)."""
+    across runs and cluster sizes (the paper's reproducibility case).
+
+    The rank is taken on the TRUE element count and the partition pad uses
+    +inf sentinels: zero-padding would inflate n, shift ceil(q*n) and
+    compute the scale over a corrupted distribution (the zeros land below
+    every |activation|)."""
     flat = jnp.abs(activations.astype(jnp.float32)).ravel()
-    pad = (-flat.size) % num_partitions
-    if pad:
-        flat = jnp.concatenate([flat, jnp.zeros((pad,), jnp.float32)])
-    return exact_quantile(flat, q, num_partitions=num_partitions)
+    k = local_ops.target_rank(flat.size, q)
+    flat = local_ops.pad_with_high_sentinel(flat, num_partitions)
+    return exact_quantile_rank(flat, k, num_partitions=num_partitions)
+
+
+def calibrate_int8_scales(activations: jax.Array, axis: int = -1,
+                          q: float = 0.999,
+                          num_partitions: int = 8) -> jax.Array:
+    """Per-CHANNEL symmetric int8 scales as one batched multi-quantile job:
+    the exact q-quantile of |activation| within each channel along ``axis``,
+    computed by a single vmapped GK Select dispatch instead of C separate
+    ``exact_quantile`` calls.  Returns the (C,) scales."""
+    return channelwise_exact_quantile(
+        jnp.abs(activations.astype(jnp.float32)), q, axis=axis,
+        num_partitions=num_partitions)
 
 
 def generate(cfg: ModelConfig, params, prompts: jax.Array, *,

@@ -189,6 +189,33 @@ def pytree_radix_quantile(tree, q: float, *, passes: int = 32,
     return from_sortable_u32(prefix, jnp.float32)
 
 
+@functools.partial(jax.jit, static_argnames=("q", "axis", "eps",
+                                             "num_partitions"))
+def channelwise_exact_quantile(x: jax.Array, q: float, *, axis: int = -1,
+                               eps: float = 0.01,
+                               num_partitions: int = 8) -> jax.Array:
+    """Per-channel exact q-quantile over every axis except ``axis``, batched
+    into ONE compiled multi-quantile job.
+
+    All channels share one static target rank (same per-channel count), so
+    the whole batch is a single vmapped GK Select — one dispatch, one fused
+    trace — instead of C separate ``exact_quantile`` calls/jobs (the Spark
+    one-job-per-quantile regression the paper's shared-sketch design
+    removes).  Channel rows that do not divide ``num_partitions`` are padded
+    with the dtype's high sentinel, which never moves ranks <= n_true
+    (``local_ops.pad_with_high_sentinel``); the rank is taken on the TRUE
+    per-channel count.  Returns the (C,) exact values.
+    """
+    from repro.core.select import gk_select
+
+    C = x.shape[axis]
+    xc = jnp.moveaxis(x, axis, 0).reshape(C, -1)
+    k = local_ops.target_rank(xc.shape[1], q)
+    xc = local_ops.pad_with_high_sentinel(xc, num_partitions, axis=1)
+    parts = xc.reshape(C, num_partitions, -1)
+    return jax.vmap(lambda p: gk_select(p, None, k=k, eps=eps))(parts)
+
+
 @functools.partial(jax.jit, static_argnames=("q", "eps", "method"))
 def quantile_clip_by_value(grads, q: float = 0.999, *, eps: float = 1e-3,
                            method: str = "radix"):

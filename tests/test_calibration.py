@@ -1,0 +1,133 @@
+"""Calibration exactness: rank-based quantile entry, sentinel padding, and
+the batched per-channel (multi-quantile-job) front-end.
+
+ISSUE 3 regression: ``calibrate_int8_scale`` used to zero-pad |activations|
+up to the partition multiple, inflating n and shifting ceil(q*n) — the
+scale was an arbitrary element of a corrupted distribution.  The fix pads
+with +inf sentinels and addresses the target by rank on the TRUE count.
+"""
+import math
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from repro.core import exact_quantile_rank, local_ops
+from repro.launch.serve import calibrate_int8_scale, calibrate_int8_scales
+from repro.optim.quantile_ops import channelwise_exact_quantile
+
+
+def kth(vals, k):
+    return np.sort(vals.ravel())[k - 1]
+
+
+class TestRankEntry:
+    def test_exact_for_every_rank_class(self):
+        rng = np.random.default_rng(0)
+        x = rng.normal(size=4096).astype(np.float32)
+        for k in [1, 7, 2048, 4095, 4096]:
+            assert float(exact_quantile_rank(jnp.asarray(x), k)) == kth(x, k)
+
+    def test_int32(self):
+        rng = np.random.default_rng(1)
+        x = rng.integers(-2**31 + 1, 2**31 - 1, size=2048,
+                         dtype=np.int64).astype(np.int32)
+        for k in [1, 1000, 2048]:
+            assert int(exact_quantile_rank(jnp.asarray(x), k)) == kth(x, k)
+
+    def test_rank_validation(self):
+        x = jnp.zeros((64,), jnp.float32)
+        with pytest.raises(ValueError):
+            exact_quantile_rank(x, 0)
+        with pytest.raises(ValueError):
+            exact_quantile_rank(x, 65)
+
+    def test_sentinel_pad_helper(self):
+        x = jnp.arange(5, dtype=jnp.float32)
+        p = local_ops.pad_with_high_sentinel(x, 8)
+        assert p.shape == (8,) and bool(jnp.all(jnp.isinf(p[5:])))
+        xi = jnp.arange(5, dtype=jnp.int32)
+        pi = local_ops.pad_with_high_sentinel(xi, 8)
+        assert int(pi[-1]) == np.iinfo(np.int32).max
+        # already aligned: untouched
+        assert local_ops.pad_with_high_sentinel(p, 8).shape == (8,)
+
+
+class TestScalarCalibration:
+    @pytest.mark.parametrize("n", [9, 37, 1001, 8191, 65521])
+    @pytest.mark.parametrize("q", [0.5, 0.999])
+    def test_odd_sizes_exact(self, n, q):
+        """Every non-multiple-of-8 size exercises the pad path; the scale
+        must equal the sort oracle on the UNPADDED data."""
+        rng = np.random.default_rng(n)
+        acts = (rng.normal(size=n) * 0.25).astype(np.float32)
+        k = min(n, max(1, math.ceil(q * n)))
+        want = kth(np.abs(acts), k)
+        got = float(calibrate_int8_scale(jnp.asarray(acts), q=q))
+        assert got == want, (n, q, got, want)
+
+    def test_zero_pad_regression(self):
+        """n=9, q=0.5: the old zero-pad path computed ceil(0.5*16)=8th of
+        (7 zeros + 9 values) = the 1st |value| instead of the 5th."""
+        rng = np.random.default_rng(2)
+        acts = (rng.normal(size=9) + 3.0).astype(np.float32)  # all |.| > 0
+        want = kth(np.abs(acts), 5)
+        got = float(calibrate_int8_scale(jnp.asarray(acts), q=0.5))
+        assert got == want
+        assert got != kth(np.abs(acts), 1)
+
+    def test_divisible_size_unchanged(self):
+        rng = np.random.default_rng(3)
+        acts = rng.normal(size=65536).astype(np.float32)
+        k = math.ceil(0.999 * acts.size)
+        assert float(calibrate_int8_scale(jnp.asarray(acts))) == \
+            kth(np.abs(acts), k)
+
+
+class TestChannelwiseCalibration:
+    def test_per_channel_scales_axis0(self):
+        rng = np.random.default_rng(4)
+        acts = rng.normal(size=(5, 123)).astype(np.float32)
+        k = math.ceil(0.999 * 123)
+        want = np.sort(np.abs(acts), axis=1)[:, k - 1]
+        got = np.asarray(calibrate_int8_scales(jnp.asarray(acts), axis=0))
+        assert got.shape == (5,) and np.array_equal(got, want)
+
+    def test_per_channel_scales_last_axis(self):
+        rng = np.random.default_rng(5)
+        acts = rng.normal(size=(123, 5)).astype(np.float32)
+        k = math.ceil(0.999 * 123)
+        want = np.sort(np.abs(acts), axis=0)[k - 1, :]
+        got = np.asarray(calibrate_int8_scales(jnp.asarray(acts), axis=-1))
+        assert np.array_equal(got, want)
+
+    def test_matches_per_channel_loop(self):
+        """One batched job == C separate exact_quantile calls (the jobs it
+        replaces), including on a divisible (pad-free) size."""
+        from repro.core import exact_quantile
+        rng = np.random.default_rng(6)
+        x = rng.normal(size=(4, 4096)).astype(np.float32)
+        got = np.asarray(channelwise_exact_quantile(jnp.asarray(x), 0.9,
+                                                    axis=0))
+        want = [float(exact_quantile(jnp.asarray(r), 0.9)) for r in x]
+        assert list(got) == want
+
+    def test_int32_channels_with_pad(self):
+        rng = np.random.default_rng(7)
+        x = rng.integers(-2**31 + 1, 2**31 - 1, size=(3, 37),
+                         dtype=np.int64).astype(np.int32)
+        k = math.ceil(0.5 * 37)
+        want = np.sort(x, axis=1)[:, k - 1]
+        got = np.asarray(channelwise_exact_quantile(jnp.asarray(x), 0.5,
+                                                    axis=0))
+        assert np.array_equal(got, want)
+
+    def test_middle_axis_and_ndim3(self):
+        rng = np.random.default_rng(8)
+        x = rng.normal(size=(6, 3, 11)).astype(np.float32)
+        k = math.ceil(0.75 * 66)
+        want = np.sort(np.abs(np.moveaxis(x, 1, 0).reshape(3, -1)),
+                       axis=1)[:, k - 1]
+        got = np.asarray(calibrate_int8_scales(jnp.asarray(x), axis=1,
+                                               q=0.75))
+        assert np.array_equal(got, want)

@@ -1,6 +1,12 @@
 """Multi-device shard_map tests. The main pytest process must keep the real
 single device (dry-run rule), so these run in subprocesses with
-XLA_FLAGS=--xla_force_host_platform_device_count=8."""
+XLA_FLAGS=--xla_force_host_platform_device_count=<P>.
+
+The default device count is 8; REPRO_TEST_DEVICES overrides it (the CI
+matrix re-runs this module at P=6 so every collective is exercised on a
+non-power-of-two mesh).  Tests that exist specifically to pin a mesh shape
+(e.g. the P=6 butterfly regression) pass ``devices=`` explicitly.
+"""
 import os
 import subprocess
 import sys
@@ -9,16 +15,20 @@ import textwrap
 import pytest
 
 REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+DEFAULT_DEVICES = int(os.environ.get("REPRO_TEST_DEVICES", "8"))
 
 
-def run_sub(body: str) -> str:
-    code = textwrap.dedent("""
+def run_sub(body: str, devices: int = None) -> str:
+    devices = DEFAULT_DEVICES if devices is None else devices
+    code = textwrap.dedent(f"""
         import os
-        os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+        os.environ["XLA_FLAGS"] = \\
+            "--xla_force_host_platform_device_count={devices}"
         import numpy as np, jax, jax.numpy as jnp
-        from repro.core import distributed_quantile
+        from repro.core import distributed_quantile, distributed_quantile_multi
         from repro.launch.mesh import make_mesh
-        mesh = make_mesh((8,), ("data",))
+        P = {devices}
+        mesh = make_mesh((P,), ("data",))
     """) + textwrap.dedent(body)
     env = dict(os.environ)
     env["PYTHONPATH"] = os.path.join(REPO, "src")
@@ -33,7 +43,7 @@ class TestDistributedQuantile:
     def test_gk_select_all_variants_exact(self):
         out = run_sub("""
             rng = np.random.default_rng(0)
-            n = 8 * 4096
+            n = P * 4096
             x = rng.normal(size=n).astype(np.float32)
             flat = np.sort(x)
             for q in [0.01, 0.5, 0.99]:
@@ -52,7 +62,7 @@ class TestDistributedQuantile:
     def test_baselines_exact(self):
         out = run_sub("""
             rng = np.random.default_rng(1)
-            n = 8 * 2048
+            n = P * 2048
             x = rng.normal(size=n).astype(np.float32)
             flat = np.sort(x)
             for q in [0.25, 0.75]:
@@ -69,7 +79,7 @@ class TestDistributedQuantile:
     def test_approx_bound_and_volume(self):
         out = run_sub("""
             rng = np.random.default_rng(2)
-            n = 8 * 8192
+            n = P * 8192
             x = rng.normal(size=n).astype(np.float32)
             flat = np.sort(x)
             q, eps = 0.5, 0.01
@@ -87,7 +97,7 @@ class TestDistributedQuantile:
         — the worst case for the shuffle baseline, no problem for GK Select."""
         out = run_sub("""
             rng = np.random.default_rng(3)
-            P, n_i = 8, 4096
+            n_i = 4096
             lo = np.linspace(-1e9, 1e9, P + 1)
             parts = np.stack([np.sort(rng.uniform(lo[i], lo[i+1], n_i))
                               for i in range(P)]).astype(np.float32)
@@ -111,23 +121,176 @@ class TestDistributedQuantile:
             from repro.core.distributed import (gk_select_sharded,
                                                 count_discard_sharded,
                                                 shard_map_compat)
-            from jax.sharding import PartitionSpec as P
-            n = 8 * 1024
+            from jax.sharding import PartitionSpec as PS
+            n = P * 1024
             xs = jax.ShapeDtypeStruct((n,), jnp.float32)
             body = functools.partial(gk_select_sharded, q=0.5, eps=0.01,
-                                     axis="data", num_shards=8)
-            f = jax.jit(shard_map_compat(body, mesh=mesh, in_specs=(P("data"),),
-                                         out_specs=P()))
+                                     axis="data", num_shards=P)
+            f = jax.jit(shard_map_compat(body, mesh=mesh,
+                                         in_specs=(PS("data"),),
+                                         out_specs=PS()))
             hlo = f.lower(xs).compile().as_text()
             a = hlo_analysis.analyze(hlo)
             total_ops = sum(a["collective_counts"].values())
             assert 0 < total_ops <= 24, total_ops   # constant, small
             body2 = functools.partial(count_discard_sharded, q=0.5,
-                                      axis="data", num_shards=8)
-            f2 = jax.jit(shard_map_compat(body2, mesh=mesh, in_specs=(P("data"),),
-                                          out_specs=P()))
+                                      axis="data", num_shards=P)
+            f2 = jax.jit(shard_map_compat(body2, mesh=mesh,
+                                          in_specs=(PS("data"),),
+                                          out_specs=PS()))
             hlo2 = f2.lower(xs).compile().as_text()
             assert " while(" in hlo2   # O(log n) rounds live in a loop
             print("PHASES-OK", total_ops)
         """)
         assert "PHASES-OK" in out
+
+
+class TestNonPow2Mesh:
+    def test_p6_all_paths_exact(self):
+        """ISSUE 3 regression: the XOR butterfly indexed shards out of range
+        for any non-power-of-two P (the paper's headline config is P=120).
+        Every reduction path must be exact on P=6."""
+        out = run_sub("""
+            rng = np.random.default_rng(10)
+            n = P * 2048
+            x = rng.normal(size=n).astype(np.float32)
+            flat = np.sort(x)
+            jx = jnp.asarray(x)
+            for q in [0.05, 0.5, 0.95]:
+                k = min(n, max(1, int(np.ceil(q * n))))
+                want = flat[k - 1]
+                for kw in [dict(), dict(speculative=True), dict(fused=True),
+                           dict(reduce_strategy="all_gather")]:
+                    got = float(distributed_quantile(jx, q, mesh, **kw))
+                    assert got == want, (q, kw, got, want)
+            for m in ["afs", "jeffers", "full_sort"]:
+                k = int(np.ceil(0.75 * n))
+                got = float(distributed_quantile(jx, 0.75, mesh, method=m))
+                assert got == flat[k - 1], (m, got)
+            qs = (0.05, 0.5, 0.95)
+            wants = [flat[min(n, max(1, int(np.ceil(q * n)))) - 1]
+                     for q in qs]
+            for fused in [False, True]:
+                got = distributed_quantile_multi(jx, qs, mesh, fused=fused)
+                assert list(np.asarray(got)) == wants, (fused, got)
+            print("NONPOW2-OK")
+        """, devices=6)
+        assert "NONPOW2-OK" in out
+
+    def test_p3_tree_reduce(self):
+        """Smallest non-trivial non-pow2 mesh: fold + 1-step butterfly."""
+        out = run_sub("""
+            rng = np.random.default_rng(11)
+            n = P * 1024
+            x = rng.normal(size=n).astype(np.float32)
+            flat = np.sort(x)
+            for q in [0.1, 0.9]:
+                k = min(n, max(1, int(np.ceil(q * n))))
+                got = float(distributed_quantile(jnp.asarray(x), q, mesh,
+                                                 speculative=True))
+                assert got == flat[k - 1], (q, got)
+            print("P3-OK")
+        """, devices=3)
+        assert "P3-OK" in out
+
+
+class TestMultiQuantileSharded:
+    def test_q_sweep_exact_and_sim_parity(self):
+        """distributed_quantile_multi is bit-exact vs the sort oracle and
+        agrees with the single-process gk_select_multi simulator for
+        Q in {1, 5, 15}, fused and unfused."""
+        out = run_sub("""
+            from repro.core import gk_select_multi
+            rng = np.random.default_rng(12)
+            n = P * 2048
+            x = rng.normal(size=n).astype(np.float32)
+            flat = np.sort(x)
+            jx = jnp.asarray(x)
+            for Q in (1, 5, 15):
+                qs = tuple(float(t) for t in np.linspace(0.05, 0.95, Q))
+                want = [flat[min(n, max(1, int(np.ceil(q * n)))) - 1]
+                        for q in qs]
+                got_t = np.asarray(distributed_quantile_multi(jx, qs, mesh))
+                got_f = np.asarray(distributed_quantile_multi(jx, qs, mesh,
+                                                              fused=True))
+                sim = np.asarray(gk_select_multi(jx.reshape(P, -1), qs))
+                assert list(got_t) == want, (Q, "tree")
+                assert list(got_f) == want, (Q, "fused")
+                assert list(sim) == want, (Q, "sim")
+            print("MULTI-OK")
+        """)
+        assert "MULTI-OK" in out
+
+
+class TestDtypeSafety:
+    def test_large_magnitude_int32_and_float64(self):
+        """The old float32/-inf round-trips in _pmax_pair / full_sort_sharded
+        rounded int32/float64 answers with magnitude > 2^24."""
+        out = run_sub("""
+            rng = np.random.default_rng(13)
+            n = P * 1024
+            xi = rng.integers(2**24, 2**31 - 1, size=n,
+                              dtype=np.int64).astype(np.int32)
+            xi[: n // 2] = -xi[: n // 2]
+            xi = rng.permutation(xi)
+            flat = np.sort(xi)
+            ji = jnp.asarray(xi)
+            for m in ["gk_select", "afs", "jeffers", "full_sort"]:
+                for q in [0.25, 0.75]:
+                    k = int(np.ceil(q * n))
+                    got = int(distributed_quantile(ji, q, mesh, method=m))
+                    assert got == flat[k - 1], (m, q, got, int(flat[k - 1]))
+            jax.config.update("jax_enable_x64", True)
+            xd = rng.integers(2**40, 2**53, size=n,
+                              dtype=np.int64).astype(np.float64)
+            xd[: n // 3] = -xd[: n // 3]
+            xd = rng.permutation(xd)
+            flatd = np.sort(xd)
+            jd = jnp.asarray(xd)
+            for m in ["gk_select", "afs", "jeffers", "full_sort"]:
+                k = int(np.ceil(0.6 * n))
+                got = float(distributed_quantile(jd, 0.6, mesh, method=m))
+                assert got == flatd[k - 1], (m, got, flatd[k - 1])
+            print("DTYPE-OK")
+        """)
+        assert "DTYPE-OK" in out
+
+
+class TestCountDiscardBoundary:
+    def test_empty_band_terminates_on_boundary(self):
+        """Dtype-extreme values are never strictly inside the open candidate
+        band; the old loop picked an arbitrary element and spun until
+        max_rounds.  The active-count psum must detect the empty band and
+        resolve to the correct boundary by rank."""
+        out = run_sub("""
+            rng = np.random.default_rng(14)
+            nn = P * 256
+            imax, imin = np.int32(2**31 - 1), np.int32(-2**31)
+            allmax = jnp.full((nn,), imax, jnp.int32)
+            for m in ["afs", "jeffers"]:
+                got = int(distributed_quantile(allmax, 0.5, mesh, method=m))
+                assert got == imax, (m, got)
+            mix = np.concatenate([np.full(nn // 2, imin, np.int64),
+                                  np.full(nn // 2, imax, np.int64)]
+                                 ).astype(np.int32)
+            jm = jnp.asarray(rng.permutation(mix))
+            for m in ["afs", "jeffers"]:
+                assert int(distributed_quantile(jm, 0.25, mesh,
+                                                method=m)) == imin
+                assert int(distributed_quantile(jm, 0.75, mesh,
+                                                method=m)) == imax
+            xf = rng.normal(size=nn).astype(np.float32)
+            t = nn // 100 + 1
+            xf[:t] = np.inf
+            xf[t:2 * t] = -np.inf
+            xf = rng.permutation(xf)
+            flatf = np.sort(xf)
+            jf = jnp.asarray(xf)
+            for m in ["afs", "jeffers"]:
+                for q in [0.001, 0.5, 0.999]:
+                    k = max(1, int(np.ceil(q * nn)))
+                    got = float(distributed_quantile(jf, q, mesh, method=m))
+                    assert got == flatf[k - 1], (m, q, got, flatf[k - 1])
+            print("BOUNDARY-OK")
+        """)
+        assert "BOUNDARY-OK" in out
