@@ -1,0 +1,98 @@
+"""Streaming service: cold vs warm exact-query cost (DESIGN.md §6).
+
+A stateless GK Select job pays 3 actions per query; the first — sketch
+construction — is a full sort of every chunk.  ``QuantileService`` maintains
+the sketch incrementally at ingest time, so a warm exact query runs only
+count+extract (+resolve).  This module measures both sides of that claim:
+
+  * structural — ``core.sketch.sketch_sorts()`` counts sketch-phase sorts
+    dispatched: a warm exact query MUST tick it zero times (asserted), the
+    cold path ticks once per buffered chunk; with the fused kernel the warm
+    query's data traffic is exactly one HBM pass per chunk
+    (``kernels.ops.hbm_passes``, asserted).
+  * wall-clock — us/query cold vs warm (answers asserted bit-identical to
+    the numpy oracle both ways).
+"""
+import os
+import time
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.core import reset_sketch_sorts, sketch_sorts
+from repro.kernels import ops as kernel_ops
+from repro.launch import QuantileService
+
+
+def timed(fn, reps=3):
+    jax.block_until_ready(fn())
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        out = fn()
+    jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / reps * 1e6
+
+
+def run(csv_rows):
+    smoke = os.environ.get("REPRO_BENCH_SMOKE", "0") == "1"
+    n_chunk = 2 ** 12 if smoke else 2 ** 16
+    n_chunks = 8 if smoke else 16
+    rng = np.random.default_rng(0)
+    chunks = [rng.normal(size=n_chunk).astype(np.float32)
+              for _ in range(n_chunks)]
+    oracle = np.sort(np.concatenate(chunks))
+    n = oracle.size
+    q = 0.99
+    k = min(n, max(1, int(np.ceil(q * n))))
+    want = float(oracle[k - 1])
+
+    svc = QuantileService(eps=0.01)
+    for c in chunks:
+        svc.ingest("bench", c)
+
+    # ---- structural: warm = ZERO sketch-phase sorts ----------------------
+    reset_sketch_sorts()
+    warm = float(svc.exact("bench", q))
+    warm_sorts = sketch_sorts()
+    reset_sketch_sorts()
+    cold = float(svc.exact("bench", q, warm=False))
+    cold_sorts = sketch_sorts()
+    assert warm == cold == want, (warm, cold, want)
+    assert warm_sorts == 0, f"warm query dispatched {warm_sorts} sketch sorts"
+    assert cold_sorts == n_chunks, (cold_sorts, n_chunks)
+    csv_rows.append(("service/sketch_sorts_warm", str(warm_sorts),
+                     f"cold={cold_sorts} chunks={n_chunks} parity=True"))
+
+    # ---- structural: fused warm query = 1 HBM pass per chunk -------------
+    svc_f = QuantileService(eps=0.01, fused=True)
+    for c in chunks:
+        svc_f.ingest("bench", c)
+    reset_sketch_sorts()
+    kernel_ops.reset_hbm_passes()
+    warm_f = float(svc_f.exact("bench", q))
+    passes = kernel_ops.hbm_passes()
+    assert warm_f == want, (warm_f, want)
+    assert sketch_sorts() == 0
+    assert passes == n_chunks, (passes, n_chunks)
+    csv_rows.append(("service/hbm_passes_warm_fused", str(passes),
+                     f"chunks={n_chunks} sorts=0 parity=True"))
+
+    # ---- wall-clock: cold vs warm exact query ----------------------------
+    us_warm = timed(lambda: svc.exact("bench", q))
+    us_cold = timed(lambda: svc.exact("bench", q, warm=False))
+    csv_rows.append(("service/us_exact_warm", f"{us_warm:.0f}",
+                     f"cold={us_cold:.0f}us "
+                     f"speedup={us_cold / max(us_warm, 1e-9):.2f}x"))
+
+    # ---- wall-clock: ingest + approx (the O(s) no-pass query) ------------
+    def ingest_once():
+        svc.ingest("throwaway", chunks[0])
+        state = svc.stream("throwaway").state   # block on the real update
+        svc.drop_stream("throwaway")
+        return state
+    us_ing = timed(ingest_once, reps=3)
+    us_approx = timed(lambda: svc.approx("bench", q))
+    csv_rows.append(("service/us_ingest_batch", f"{us_ing:.0f}",
+                     f"batch={n_chunk} approx_query={us_approx:.0f}us"))
+    return csv_rows

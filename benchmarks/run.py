@@ -19,7 +19,7 @@ sys.path.insert(0, os.path.join(_REPO, "src"))  # `repro` package
 
 from benchmarks import (bench_scaling, bench_distributions, bench_complexity,
                         bench_rounds, bench_roofline, bench_fused,
-                        bench_multi)
+                        bench_multi, bench_service)
 
 MODULES = [
     ("fig1_2_scaling", bench_scaling),
@@ -29,6 +29,7 @@ MODULES = [
     ("roofline", bench_roofline),
     ("fused", bench_fused),
     ("multi", bench_multi),
+    ("service", bench_service),
 ]
 
 # smoke: only the modules that honour REPRO_BENCH_SMOKE sizing and finish
@@ -36,6 +37,7 @@ MODULES = [
 SMOKE_MODULES = [
     ("fused", bench_fused),
     ("multi", bench_multi),
+    ("service", bench_service),
 ]
 
 

@@ -48,3 +48,20 @@ kc = int(np.ceil(0.999 * ch_acts.shape[0]))
 ch_oracle = np.sort(np.abs(np.asarray(ch_acts)), axis=0)[kc - 1, :]
 print("per-channel scales:", np.asarray(scales).round(4))
 assert np.array_equal(np.asarray(scales), ch_oracle)
+
+# --- streaming calibration: running sketch across decode steps --------------
+# Instead of capturing an activation history and re-sketching it for every
+# scale query, a StreamingCalibrator folds each decode step's |logits| into
+# a persistent SketchState; scale queries then run GK Select WARM — the
+# sketch phase (the full sort) never happens at query time (DESIGN.md §6).
+from repro.core import reset_sketch_sorts, sketch_sorts
+from repro.launch import StreamingCalibrator
+
+cal = StreamingCalibrator(q=0.999)
+toks2 = generate(cfg, params, prompts, gen_len=12, calibrator=cal)
+reset_sketch_sorts()
+warm_scale = float(cal.scale("logits"))
+assert sketch_sorts() == 0           # warm query: no sketch-phase sort
+print(f"streaming calibration over {cal.observed('logits')} |logit| samples: "
+      f"exact p99.9 scale = {warm_scale:.6f} "
+      f"(approx O(s): {float(cal.approx_scale('logits')):.6f})")

@@ -5,11 +5,17 @@ Public API:
   full_sort_quantile / psrs_sort / afs_select / jeffers_select /
   approx_quantile                               — the paper's baseline suite
   distributed_quantile / gk_select_sharded      — shard_map production path
+  engine (phase_sketch / phase_pivot / ...)     — phase-based engine layer
   GKSketch / merge_fold_left / merge_tree       — faithful GK sketch layer
+  SketchState / sketch_init / sketch_update /
+  sketch_merge / sketch_query_rank              — streaming sketch state
 """
 from .sketch import (GKSketch, merge_fold_left, merge_tree,
                      local_sample_sketch, query_merged_sketch,
-                     sample_sketch_params)
+                     sample_sketch_params,
+                     SketchState, sketch_budget, sketch_init, sketch_update,
+                     sketch_merge, sketch_query_rank, sketch_rank_bound,
+                     reset_sketch_sorts, sketch_sorts, record_sketch_sort)
 from .select import (exact_quantile, exact_quantile_rank, gk_select,
                      gk_select_multi)
 from .baselines import (full_sort_quantile, psrs_sort, afs_select,
@@ -19,11 +25,15 @@ from .distributed import (distributed_quantile, distributed_quantile_multi,
                           approx_quantile_sharded, count_discard_sharded,
                           full_sort_sharded, tree_reduce_candidates,
                           gather_candidates, shard_map_compat)
+from . import engine
 from . import local_ops
 
 __all__ = [
     "GKSketch", "merge_fold_left", "merge_tree", "local_sample_sketch",
     "query_merged_sketch", "sample_sketch_params",
+    "SketchState", "sketch_budget", "sketch_init", "sketch_update",
+    "sketch_merge", "sketch_query_rank", "sketch_rank_bound",
+    "reset_sketch_sorts", "sketch_sorts", "record_sketch_sort",
     "exact_quantile", "exact_quantile_rank", "gk_select", "gk_select_multi",
     "full_sort_quantile", "psrs_sort", "afs_select", "jeffers_select",
     "approx_quantile", "count_discard_rounds",
@@ -31,5 +41,5 @@ __all__ = [
     "gk_select_sharded", "gk_select_multi_sharded",
     "approx_quantile_sharded", "count_discard_sharded", "full_sort_sharded",
     "tree_reduce_candidates", "gather_candidates", "shard_map_compat",
-    "local_ops",
+    "engine", "local_ops",
 ]

@@ -1,4 +1,5 @@
-"""Distributed GK Select and baselines under shard_map — the production path.
+"""Public entry points for distributed quantiles — thin plans over the
+phase-based engine (``repro.core.engine``; DESIGN.md §6).
 
 Spark roles map to SPMD collectives (DESIGN.md §2):
 
@@ -11,440 +12,31 @@ Spark roles map to SPMD collectives (DESIGN.md §2):
                             step (paper's reduceSlices), or a single capped
                             all_gather (strategy="all_gather")
 
-The faithful variant keeps the paper's 3 data-dependent collective phases and
-its one-sided extraction volume (the side is folded in by sign-negation so
-shapes stay static; see DESIGN.md "Static shapes").  ``speculative=True`` is
-the beyond-paper 2-phase variant: both sides are extracted alongside the
-count, removing the sign dependency, at 2x extraction bytes (still O(eps*n)).
-
-``gk_select_multi_sharded`` / ``distributed_quantile_multi`` widen every
-phase to a static tuple of Q quantile levels — one sketch, one (optionally
-fused single-HBM-pass) count+extract, one butterfly for all Q candidate
-buffers — where Spark would run Q separate jobs (DESIGN.md §5).
+The engine bodies (``gk_select_sharded``, ``gk_select_multi_sharded``,
+``count_discard_sharded``, ``full_sort_sharded``, ...) are composed from the
+shared phase functions ``phase_sketch / phase_pivot / phase_count_extract /
+phase_reduce / phase_resolve`` in ``engine.py`` and are re-exported here
+unchanged for compatibility.  This module only owns the mesh-facing
+wrappers: validate, pick a plan, shard_map it.
 """
 from __future__ import annotations
 
 import functools
-import math
 from typing import Sequence
 
 import jax
-import jax.numpy as jnp
-from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+from jax.sharding import Mesh, PartitionSpec as P
 
-from . import local_ops
-from .sketch import local_sample_sketch, query_merged_sketch, sample_sketch_params
-
-
-# ---------------------------------------------------------------------------
-# collective helpers
-# ---------------------------------------------------------------------------
-
-
-def _axis_size(axis) -> int:
-    return jax.lax.psum(1, axis)
-
-
-def shard_map_compat(body, *, mesh, in_specs, out_specs):
-    """``jax.shard_map`` across jax versions: new-style ``jax.shard_map``
-    (check_vma) when present, ``jax.experimental.shard_map`` (check_rep)
-    otherwise.  Replication checking is off either way — the bodies return
-    deliberately replicated scalars from psum/pmax chains."""
-    if hasattr(jax, "shard_map"):
-        return jax.shard_map(body, mesh=mesh, in_specs=in_specs,
-                             out_specs=out_specs, check_vma=False)
-    from jax.experimental.shard_map import shard_map
-    return shard_map(body, mesh=mesh, in_specs=in_specs,
-                     out_specs=out_specs, check_rep=False)
-
-
-def tree_reduce_candidates(buf: jax.Array, axis: str, num_shards: int,
-                           keep_largest: bool) -> jax.Array:
-    """Butterfly reduction of a fixed-capacity candidate buffer, generalized
-    to ARBITRARY shard counts: every step merges two buffers along the last
-    axis and keeps the ``cap`` best; all shards end with the globally-best
-    cap candidates.  Leading axes (e.g. the Q quantiles of the multi engine)
-    ride along — one butterfly reduces all of them.
-
-    A plain XOR butterfly ``(i, i ^ d)`` only works when P is a power of two
-    (for P=120 it indexes shards out of range).  For general P the reduction
-    runs in three stages over p2 = the largest power of two <= P (DESIGN.md
-    §5):
-
-      1. fold: the r = P - p2 extra shards send their buffers to shards
-         0..r-1, which merge them in;
-      2. butterfly: log2(p2) XOR ppermute steps over shards 0..p2-1 — shards
-         >= p2 receive nothing and mask the incoming zeros to sentinels;
-      3. broadcast: shards 0..r-1 return the fully-reduced buffer to the
-         extra shards.
-
-    log2(p2) + 2 ppermutes total; for power-of-two P this is exactly the
-    old butterfly.  The globally best cap values always survive: each kept
-    set is a superset of the intersection of the global best with the
-    merged pair's union.
-    """
-    cap = buf.shape[-1]
-    if num_shards <= 1:
-        return buf
-    lo, hi = local_ops._sentinels(buf.dtype)
-    sentinel = lo if keep_largest else hi
-
-    def merge(a, b):
-        both = jnp.concatenate([a, b], axis=-1)
-        if keep_largest:
-            return jax.lax.top_k(both, cap)[0]
-        return -jax.lax.top_k(-both, cap)[0]
-
-    p2 = 1 << (num_shards.bit_length() - 1)   # largest power of two <= P
-    r = num_shards - p2
-    me = jax.lax.axis_index(axis)
-    sent_buf = jnp.full(buf.shape, sentinel, buf.dtype)
-
-    if r:
-        # fold the r extra shards into shards 0..r-1 (non-destinations
-        # receive zeros from ppermute — mask them to identity sentinels)
-        other = jax.lax.ppermute(buf, axis, [(p2 + i, i) for i in range(r)])
-        buf = merge(buf, jnp.where(me < r, other, sent_buf))
-
-    for j in range(int(math.log2(p2))):
-        d = 1 << j
-        other = jax.lax.ppermute(buf, axis,
-                                 [(i, i ^ d) for i in range(p2)])
-        if r:
-            other = jnp.where(me < p2, other, sent_buf)
-        buf = merge(buf, other)
-
-    if r:
-        # hand the reduced buffer back to the extra shards
-        other = jax.lax.ppermute(buf, axis, [(i, p2 + i) for i in range(r)])
-        buf = jnp.where(me >= p2, other, buf)
-    return buf
-
-
-def gather_candidates(buf: jax.Array, axis: str) -> jax.Array:
-    """Flat all_gather alternative (Jeffers-style collect): O(cap*P) volume.
-    Leading axes are preserved; only the candidate (last) axis is merged
-    across shards, so a (Q, cap) buffer gathers to (Q, P*cap)."""
-    g = jax.lax.all_gather(buf, axis)       # (P, *buf.shape)
-    g = jnp.moveaxis(g, 0, -2)              # (*lead, P, cap)
-    return g.reshape(*g.shape[:-2], -1)
-
-
-# ---------------------------------------------------------------------------
-# GK Select (shard_map body)
-# ---------------------------------------------------------------------------
-
-
-def gk_select_sharded(x_local: jax.Array, *, q: float, eps: float, axis: str,
-                      num_shards: int, speculative: bool = False,
-                      reduce_strategy: str = "tree",
-                      count3_fn=None, extract_fns=None,
-                      fused_fn=None) -> jax.Array:
-    """Body to run inside shard_map: x_local is this shard's (n_local,) block.
-    Returns the exact quantile, replicated on every shard.
-
-    count3_fn / extract_fns allow kernel injection (Pallas partition_count /
-    block-select) without changing the algorithm.  fused_fn injects the
-    single-pass fused band-extraction kernel
-    (``kernels.ops.fused_count_extract`` signature ``(x, pivot, cap) ->
-    (counts, below, above)``): the whole speculative count+extract phase
-    becomes ONE HBM stream over the shard (implies ``speculative=True``).
-    """
-    n_local = x_local.shape[0]
-    n = n_local * num_shards
-    k = jnp.int32(local_ops.target_rank(n, q))
-    count3 = count3_fn or local_ops.count3
-    ex_below = extract_fns[0] if extract_fns else local_ops.extract_below
-    ex_above = extract_fns[1] if extract_fns else local_ops.extract_above
-
-    if speculative or fused_fn is not None:
-        # The speculative round is exactly the Q=1 case of the multi engine:
-        # delegate (one data flow to maintain), adapting any injected
-        # single-pivot seams to the multi signatures.
-        multi_fused = None
-        if fused_fn is not None:
-            def multi_fused(x, pivots, cap_):
-                c, b, a = fused_fn(x, pivots[0], cap_)
-                return c[None], b[None], a[None]
-
-        def count_extract(x, pivot_, cap_):
-            return (count3(x, pivot_), ex_below(x, pivot_, cap_),
-                    ex_above(x, pivot_, cap_))
-
-        return gk_select_multi_sharded(
-            x_local, qs=(q,), eps=eps, axis=axis, num_shards=num_shards,
-            reduce_strategy=reduce_strategy, fused_fn=multi_fused,
-            count_extract_fn=count_extract)[0]
-
-    # ---- Phase 1: local sketch -> all_gather -> replicated merge+query ----
-    m, s = sample_sketch_params(n, n_local, eps, num_shards)
-    vals, weights = local_sample_sketch(x_local, m, s)
-    g_vals = jax.lax.all_gather(vals, axis).reshape(-1)
-    g_wts = jax.lax.all_gather(weights, axis).reshape(-1)
-    pivot = query_merged_sketch(g_vals, g_wts, k, num_shards, m)
-
-    cap = local_ops.candidate_cap(n, eps, n_local)
-
-    # ---- Phase 2: counts -> Delta_k ----
-    counts = jax.lax.psum(count3(x_local, pivot), axis)
-    lt, eq = counts[0], counts[1]
-    need_left = lt - k + 1
-    need_right = k - (lt + eq)
-    go_left = need_left > 0
-
-    # ---- Phase 3: one-sided extraction (sign-folded for static shapes) ----
-    # For the left side we negate values so "smallest above -pivot" ==
-    # "largest below pivot"; extraction volume stays 1x (paper-faithful).
-    y = jnp.where(go_left, -x_local, x_local)
-    piv = jnp.where(go_left, -pivot, pivot)
-    cand = ex_above(y, piv, cap)           # cap smallest of y above piv
-    if reduce_strategy == "tree":
-        cand = tree_reduce_candidates(cand, axis, num_shards, keep_largest=False)
-    else:
-        cand = gather_candidates(cand, axis)
-    need = jnp.maximum(jnp.where(go_left, need_left, need_right), 1)
-    kth = local_ops.kth_smallest(cand, need, cap)
-    side_val = jnp.where(go_left, -kth, kth)
-    return jnp.where((need_left <= 0) & (need_right <= 0), pivot, side_val)
-
-
-def gk_select_multi_sharded(x_local: jax.Array, *, qs: Sequence[float],
-                            eps: float, axis: str, num_shards: int,
-                            reduce_strategy: str = "tree",
-                            fused_fn=None, count_extract_fn=None) -> jax.Array:
-    """Q quantiles from ONE sharded job (the multi-quantile production
-    engine; DESIGN.md §5).  ``qs`` is a static tuple of quantile levels;
-    returns the (Q,) exact values, replicated on every shard.
-
-    Spark answers Q quantiles with Q jobs, re-reading the data 3Q times.
-    Here the whole job shares one data flow:
-
-      * ONE sketch phase — a single all_gather'd summary is queried for all
-        Q target ranks (pivots are a (Q,) vector);
-      * ONE count+extract phase — ``fused_fn`` (the multi-pivot Pallas
-        kernel ``kernels.ops.fused_count_extract_multi``, signature
-        ``(x, pivots, cap) -> (counts (Q,3), below (Q,cap), above
-        (Q,cap))``) streams the shard from HBM once for every pivot; the
-        jnp fallback vmaps ``count_extract_fn`` (single-pivot seam,
-        default ``local_ops.fused_count_extract`` — 3 streams per pivot);
-      * ONE reduction phase — the (Q, cap) candidate buffers ride a single
-        butterfly (``tree_reduce_candidates`` reduces the last axis and
-        carries leading axes along), so the collective count does not grow
-        with Q.
-    """
-    n_local = x_local.shape[0]
-    n = n_local * num_shards
-    ks = jnp.array([local_ops.target_rank(n, q) for q in qs], jnp.int32)
-
-    # ---- Phase 1: one shared sketch, queried for all Q ranks ----
-    m, s = sample_sketch_params(n, n_local, eps, num_shards)
-    vals, weights = local_sample_sketch(x_local, m, s)
-    g_vals = jax.lax.all_gather(vals, axis).reshape(-1)
-    g_wts = jax.lax.all_gather(weights, axis).reshape(-1)
-    pivots = jax.vmap(
-        lambda k: query_merged_sketch(g_vals, g_wts, k, num_shards, m))(ks)
-
-    cap = local_ops.candidate_cap(n, eps, n_local)
-
-    # ---- Phase 2: one pass (fused) over the shard for all Q pivots ----
-    if fused_fn is not None:
-        c_local, below, above = fused_fn(x_local, pivots, cap)
-    else:
-        one = count_extract_fn or local_ops.fused_count_extract
-        c_local, below, above = jax.vmap(
-            lambda p: one(x_local, p, cap))(pivots)
-    counts = jax.lax.psum(c_local, axis)              # (Q, 3)
-
-    # ---- Phase 3: one butterfly for all Q candidate buffers ----
-    if reduce_strategy == "tree":
-        below = tree_reduce_candidates(below, axis, num_shards,
-                                       keep_largest=True)
-        above = tree_reduce_candidates(above, axis, num_shards,
-                                       keep_largest=False)
-    else:
-        below = gather_candidates(below, axis)        # (Q, P*cap)
-        above = gather_candidates(above, axis)
-
-    def resolve_one(pivot, k, c, b, a):
-        return local_ops.resolve(pivot, k, c[0], c[1], b, a, cap)
-
-    return jax.vmap(resolve_one)(pivots, ks, counts, below, above)
-
-
-# ---------------------------------------------------------------------------
-# Baselines (shard_map bodies)
-# ---------------------------------------------------------------------------
-
-
-def approx_quantile_sharded(x_local: jax.Array, *, q: float, eps: float,
-                            axis: str, num_shards: int) -> jax.Array:
-    """GK Sketch path only (Spark approxQuantile): 1 collective phase."""
-    n_local = x_local.shape[0]
-    n = n_local * num_shards
-    k = jnp.int32(local_ops.target_rank(n, q))
-    m, s = sample_sketch_params(n, n_local, eps, num_shards)
-    vals, weights = local_sample_sketch(x_local, m, s)
-    g_vals = jax.lax.all_gather(vals, axis).reshape(-1)
-    g_wts = jax.lax.all_gather(weights, axis).reshape(-1)
-    return query_merged_sketch(g_vals, g_wts, k, num_shards, m)
-
-
-def _pmax_pair(priority: jax.Array, value: jax.Array, axis: str):
-    """Value attached to the max priority across the axis (distributed
-    reservoir pick), dtype-safe: the owner is the lowest rank holding the
-    max priority and its value travels through a one-hot psum.  The old
-    float32/-inf masking round-trip rounded int32/float64 values with
-    magnitude > 2^24; the one-hot sum (value + P-1 zeros) is bit-exact for
-    every dtype."""
-    gp = jax.lax.pmax(priority, axis)
-    me = jax.lax.axis_index(axis)
-    owner = jax.lax.pmin(jnp.where(priority == gp, me, jnp.int32(1 << 30)),
-                         axis)
-    return jax.lax.psum(jnp.where(me == owner, value, jnp.zeros_like(value)),
-                        axis)
-
-
-def count_discard_sharded(x_local: jax.Array, *, q: float, axis: str,
-                          num_shards: int, max_rounds: int = 128, seed: int = 0,
-                          collect_counts: bool = False) -> jax.Array:
-    """AFS (collect_counts=False: psum ~ treeReduce) / Jeffers
-    (collect_counts=True: all_gather ~ collect) — O(log n) rounds, one
-    collective phase per round inside a while_loop.
-
-    Candidates are drawn strictly inside the open band (lo, hi), so values
-    equal to a dtype extreme (int32 min/max, +-inf) can never be picked as
-    pivots.  When the target lands on such a value the band empties; the
-    loop detects that and terminates on the boundary whose side rank says
-    holds rank k — instead of spinning on an arbitrary all-inactive pick
-    until max_rounds.  The band population is derived from carried rank
-    masses (``n_le_lo`` = #{x <= lo}, ``n_lt_hi`` = #{x < hi}, both
-    updatable from the counts already collected each round), so detection
-    adds no per-round collective.
-    """
-    n_local = x_local.shape[0]
-    n = n_local * num_shards
-    k = local_ops.target_rank(n, q)
-    lo, hi = local_ops._sentinels(x_local.dtype)
-    base = jax.random.fold_in(jax.random.PRNGKey(seed),
-                              jax.lax.axis_index(axis))
-
-    def candidate(lo_, hi_, key):
-        pri = jax.random.uniform(key, x_local.shape)
-        active = (x_local > lo_) & (x_local < hi_)
-        pri = jnp.where(active, pri, -1.0)
-        i = jnp.argmax(pri)
-        return _pmax_pair(pri[i], x_local[i], axis)
-
-    # elements equal to a sentinel boundary are never active; count them once
-    # (one stacked psum) so an emptied band resolves to the right boundary
-    c_lo = local_ops.count3(x_local, lo)
-    c_hi = local_ops.count3(x_local, hi)
-    sums = jax.lax.psum(jnp.stack([c_lo[0] + c_lo[1], c_hi[0]]), axis)
-    n_le_lo0, n_lt_hi0 = sums[0], sums[1]
-
-    key0, sub = jax.random.split(base)
-    pivot0 = candidate(lo, hi, sub)
-
-    def cond(st):
-        done, rounds = st[5], st[7]
-        return (~done) & (rounds < max_rounds)
-
-    def body(st):
-        lo_, hi_, pivot, n_le_lo, n_lt_hi, done, ans, rounds, key = st
-        empty = (n_lt_hi - n_le_lo) == 0
-        boundary = jnp.where(k <= n_le_lo, lo_, hi_)
-        c = local_ops.count3(x_local, pivot)
-        if collect_counts:
-            # dtype pinned: under x64, sum(int32) would promote the loop
-            # carry to int64 and break the while_loop's carry contract
-            counts = jax.lax.all_gather(c, axis).sum(0, dtype=jnp.int32)
-        else:
-            counts = jax.lax.psum(c, axis)
-        lt, eq = counts[0], counts[1]
-        found = (~empty) & (lt < k) & (k <= lt + eq)
-        go_left = k <= lt
-        lo2 = jnp.where(go_left, lo_, pivot)
-        hi2 = jnp.where(go_left, pivot, hi_)
-        n_le_lo2 = jnp.where(go_left, n_le_lo, lt + eq)
-        n_lt_hi2 = jnp.where(go_left, lt, n_lt_hi)
-        key2, sub2 = jax.random.split(key)
-        nxt = candidate(lo2, hi2, sub2)
-        hit = found | empty
-        return (jnp.where(hit, lo_, lo2), jnp.where(hit, hi_, hi2),
-                jnp.where(hit, pivot, nxt),
-                jnp.where(hit, n_le_lo, n_le_lo2),
-                jnp.where(hit, n_lt_hi, n_lt_hi2), done | hit,
-                jnp.where(empty, boundary, jnp.where(found, pivot, ans)),
-                rounds + 1, key2)
-
-    st0 = (lo, hi, pivot0, n_le_lo0, n_lt_hi0, jnp.array(False), pivot0,
-           jnp.array(0, jnp.int32), key0)
-    st = jax.lax.while_loop(cond, body, st0)
-    return st[6]
-
-
-def full_sort_sharded(x_local: jax.Array, *, q: float, axis: str,
-                      num_shards: int, capacity_factor: float = 2.0) -> jax.Array:
-    """PSRS / Spark range-partition sort: the O(n) full-shuffle baseline.
-
-    Per-shard regular samples -> replicated splitters -> capacity-padded
-    all_to_all shuffle -> local sort -> rank-addressed exact quantile.
-    Capacity lanes are sentinel-padded; with pathological skew the quantile
-    falls back on the (exact) global-min of dropped lanes being impossible —
-    capacity_factor sizes the buckets, tests use distributions within it.
-    """
-    n_local = x_local.shape[0]
-    n = n_local * num_shards
-    k = local_ops.target_rank(n, q)
-    lo, hi = local_ops._sentinels(x_local.dtype)
-
-    # splitters from regular samples (r per shard)
-    r = min(n_local, 64)
-    xs = jnp.sort(x_local)
-    stride = max(1, n_local // r)
-    samples = xs[::stride][:r]
-    all_samples = jnp.sort(jax.lax.all_gather(samples, axis).reshape(-1))
-    # r >= 1 so the gathered sample count is >= num_shards, but guard the
-    # stride anyway: step == 0 would make the splitter slice a wrap-around
-    step = max(1, all_samples.size // num_shards)
-    splitters = all_samples[step::step][: num_shards - 1]
-
-    # bucket & pack into capacity lanes per destination
-    bucket = jnp.searchsorted(splitters, x_local, side="right")
-    cap = int(min(n_local, math.ceil(capacity_factor * n_local / num_shards)))
-    order = jnp.argsort(bucket)
-    xb = x_local[order]
-    bb = bucket[order]
-    # position within bucket
-    start = jnp.searchsorted(bb, jnp.arange(num_shards), side="left")
-    pos = jnp.arange(n_local) - start[bb]
-    valid = pos < cap
-    send = jnp.full((num_shards, cap), hi, x_local.dtype)
-    send = send.at[bb, jnp.where(valid, pos, cap - 1)].set(
-        jnp.where(valid, xb, send[bb, jnp.where(valid, pos, cap - 1)]))
-    # counts actually shipped per destination (for exact global ranks)
-    sent = jax.ops.segment_sum(valid.astype(jnp.int32), bb, num_shards)
-
-    recv = jax.lax.all_to_all(send, axis, split_axis=0, concat_axis=0,
-                              tiled=False)
-    recv = recv.reshape(-1)
-    local_sorted = jnp.sort(recv)  # sentinels sort last
-
-    # exact rank bookkeeping: ranks below my bucket
-    counts_all = jax.lax.psum(sent, axis)          # (P,) global per-bucket
-    below = jnp.cumsum(counts_all) - counts_all    # exclusive prefix
-    mine = jax.lax.axis_index(axis)
-    k_local = k - below[mine]
-    have = (k_local >= 1) & (k_local <= counts_all[mine])
-    val = local_sorted[jnp.clip(k_local - 1, 0, recv.size - 1)]
-    # exactly one shard owns rank k; a one-hot psum ships its value without
-    # the float32/-inf round-trip that rounded wide int32/float64 answers.
-    # If capacity overflow dropped rank k entirely (pathological skew), no
-    # shard owns it — surface the high sentinel, not a plausible-looking 0.
-    contrib = jnp.where(have, val, jnp.zeros_like(val))
-    out = jax.lax.psum(contrib, axis)
-    owned = jax.lax.psum(have.astype(jnp.int32), axis)
-    return jnp.where(owned > 0, out, hi)
+# Engine bodies + collective helpers re-exported for compatibility: every
+# pre-refactor import path (benchmarks, tests, downstream code) keeps
+# working against the phase-based engine.
+from .engine import (shard_map_compat, tree_reduce_candidates,
+                     gather_candidates, _pmax_pair, _axis_size,
+                     phase_sketch, phase_pivot, phase_count,
+                     phase_count_extract, phase_reduce, phase_resolve,
+                     gk_select_sharded, gk_select_multi_sharded,
+                     approx_quantile_sharded, count_discard_sharded,
+                     full_sort_sharded)
 
 
 # ---------------------------------------------------------------------------
@@ -500,13 +92,20 @@ def distributed_quantile(x: jax.Array, q: float, mesh: Mesh, *,
 def distributed_quantile_multi(x: jax.Array, qs: Sequence[float], mesh: Mesh,
                                *, axis: str = "data", eps: float = 0.01,
                                reduce_strategy: str = "tree",
-                               fused: bool = False) -> jax.Array:
+                               fused: bool = False,
+                               pivots=None, cap: int = None) -> jax.Array:
     """Exact quantiles at ALL the (static) levels in ``qs`` from one sharded
     job: one sketch phase, one count+extract pass per shard (fused=True
     streams the shard from HBM once for every pivot via the multi-pivot
     Pallas kernel — 3Q passes -> 1), one butterfly for all Q candidate
     buffers.  Returns the (Q,) values, replicated.  Works on any shard
-    count, power of two or not."""
+    count, power of two or not.
+
+    ``pivots`` runs the job WARM (DESIGN.md §6): a (Q,) vector of
+    externally-maintained pivots (e.g. from a live ``SketchState``) skips
+    the sketch phase — and its per-shard sort — entirely; ``cap`` then
+    sizes the candidate buffers from the supplier's tracked rank bound.
+    """
     num_shards = mesh.shape[axis]
     qs = tuple(float(q) for q in qs)
     if not qs:
@@ -524,6 +123,6 @@ def distributed_quantile_multi(x: jax.Array, qs: Sequence[float], mesh: Mesh,
     body = functools.partial(gk_select_multi_sharded, qs=qs, eps=eps,
                              axis=axis, num_shards=num_shards,
                              reduce_strategy=reduce_strategy,
-                             fused_fn=fused_fn)
+                             fused_fn=fused_fn, pivots=pivots, cap=cap)
     fn = shard_map_compat(body, mesh=mesh, in_specs=(P(axis),), out_specs=P())
     return fn(x)

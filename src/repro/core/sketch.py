@@ -14,17 +14,52 @@ Two families, per DESIGN.md §2:
   construction).  Pure jnp, fully vectorizable, identical worst-case rank
   guarantee ``|rank(query(k)) - k| <= eps * n``.
 
-Both are interchangeable as GK Select's pivot oracle.
+* ``SketchState`` — the *streaming* form of the sample sketch (DESIGN.md §6):
+  a jit-compatible pytree holding a fixed-budget weighted summary that is
+  maintained incrementally as batches arrive (``sketch_init`` /
+  ``sketch_update`` / ``sketch_merge``).  Each update sorts only the new
+  batch and tile-merges it into the resident summary, so GK Select's most
+  expensive action — the per-shard full sort — is paid once per *batch* at
+  ingest time instead of once per *query*.
+
+All are interchangeable as GK Select's pivot oracle.
 """
 from __future__ import annotations
 
 import dataclasses
 import math
-from typing import Tuple
+from typing import NamedTuple, Tuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
+
+
+# ---------------------------------------------------------------------------
+# sketch-phase sort accounting (mirrors kernels.ops' HBM-pass counter).
+# Ticked at the DISPATCH layer only — QuantileService.ingest / the cold
+# rebuild — never inside traced code, so the count is exact per eager call
+# (a trace-time tick would double-count the first call of each shape).
+# benchmarks/bench_service.py asserts a warm exact query ticks this ZERO times.
+# ---------------------------------------------------------------------------
+
+_SKETCH_SORTS = {"total": 0}
+
+
+def reset_sketch_sorts() -> None:
+    """Zero the sketch-phase sort counter."""
+    _SKETCH_SORTS["total"] = 0
+
+
+def sketch_sorts() -> int:
+    """Sketch-construction sorts dispatched since the last reset."""
+    return _SKETCH_SORTS["total"]
+
+
+def record_sketch_sort(n: int = 1) -> None:
+    """Tick the sketch-phase sort counter (called by every code path that
+    sorts raw data to build or rebuild a sketch)."""
+    _SKETCH_SORTS["total"] += n
 
 # ---------------------------------------------------------------------------
 # TPU-native sample sketch (pure jnp; used inside jit / shard_map)
@@ -71,15 +106,193 @@ def query_merged_sketch(values: jax.Array, weights: jax.Array, k: jax.Array,
     values/weights are flat (P*s,).  rank(v_t) in [cum_t, cum_t + P*m], so the
     midpoint estimate cum_t + P*m/2 is within eps*n of the true rank of the
     chosen sample (DESIGN.md §2).
+
+    The argmin runs in int32: the old float32 path could not represent ranks
+    above 2^24, so at n ~ 1e9 the chosen pivot's rank error could exceed the
+    eps*n guarantee and blow the candidate cap.  int32 is exact to 2^31
+    (single-job counts are pinned below that anyway — see local_ops.count3).
     """
     order = jnp.argsort(values)
     v = values[order]
     w = weights[order]
-    cum = jnp.cumsum(w)
-    est = cum.astype(jnp.float32) + (num_shards * m) / 2.0
-    kf = jnp.asarray(k).astype(jnp.float32)
-    t = jnp.argmin(jnp.abs(est - kf))
+    cum = jnp.cumsum(w)                                   # int32: exact ranks
+    est = cum + jnp.int32(num_shards * m // 2)
+    ki = jnp.asarray(k).astype(jnp.int32)
+    t = jnp.argmin(jnp.abs(est - ki))
     return v[t]
+
+
+# ---------------------------------------------------------------------------
+# SketchState: incrementally-maintained device-resident sample sketch
+# (mergeable-summary form of the stride-m sketch; DESIGN.md §6)
+# ---------------------------------------------------------------------------
+
+
+class SketchState(NamedTuple):
+    """Fixed-budget weighted quantile summary, maintained incrementally.
+
+    A jit-compatible pytree (NamedTuple of arrays — flows through jit, vmap,
+    shard_map and device_put unchanged):
+
+      values  (s,)  sorted ascending; unused lanes carry the dtype's high
+                    sentinel with weight 0 so shapes stay static
+      weights (s,)  int32 mass per sample; cumsum(weights) estimates each
+                    sample's rank in the ingested multiset
+      n       ()    int32 true ingested count (sum of weights)
+      slack   ()    int32 upper bound on how far any sample's cumulative
+                    weight can UNDERcount its true rank (interleave loss)
+
+    Invariant (DESIGN.md §6): for every sample, ``cum_i <= rank(v_i) <=
+    cum_i + slack``; gaps between adjacent samples are bounded by
+    ``max(weights)``.  Queries therefore have rank error at most
+    ``slack/2 + max(weights)`` (``sketch_rank_bound``), and the engine sizes
+    its candidate cap from that *tracked* bound — streaming can degrade
+    precision (bigger cap, more bandwidth) but never exactness.
+
+    ``slack`` composes by MAX, not sum: every sample's cum is fixed at its
+    own ingest/merge and later tile-merges add exact counts to it, so the
+    undercount of the whole summary is the worst single ingest, not the sum
+    over the stream's history.
+    """
+
+    values: jax.Array
+    weights: jax.Array
+    n: jax.Array
+    slack: jax.Array
+
+
+def sketch_budget(eps: float) -> int:
+    """Static sample budget s for a streamed rank-error target of eps*n.
+
+    16/eps lanes keep the steady-state compression stride near eps*n/16, so
+    the tracked query bound (slack/2 + max gap) stays well inside eps*n even
+    after many update/compress cycles.
+    """
+    if not 0.0 < eps < 1.0:
+        raise ValueError(f"eps must be in (0,1), got {eps}")
+    return int(min(1 << 16, max(64, math.ceil(16.0 / eps))))
+
+
+def sketch_init(budget: int, dtype=jnp.float32) -> SketchState:
+    """Empty stream summary with a static ``budget``-lane budget."""
+    if jnp.issubdtype(jnp.dtype(dtype), jnp.floating):
+        hi = jnp.array(jnp.inf, dtype)
+    else:
+        hi = jnp.array(jnp.iinfo(dtype).max, dtype)
+    return SketchState(values=jnp.full((budget,), hi, dtype),
+                       weights=jnp.zeros((budget,), jnp.int32),
+                       n=jnp.int32(0), slack=jnp.int32(0))
+
+
+def _batch_run(batch: jax.Array, budget: int):
+    """Sort one incoming batch into a (<=budget,)-sample weighted run with
+    EXACT cumulative ranks (stride m_b = ceil(n_b/budget); m_b = 1 keeps
+    full resolution).  Returns (values, weights, m_b)."""
+    n_b = batch.shape[0]
+    m_b = max(1, -(-n_b // budget))
+    s_b = min(n_b, budget)
+    vals, wts = local_sample_sketch(batch, m_b, s_b)
+    return vals, wts, m_b
+
+
+def _compress(values: jax.Array, weights: jax.Array, n, budget: int):
+    """Re-compress a merged weighted run to the static ``budget``.
+
+    Kept samples are a SUBSET of the input chosen at evenly-spaced rank
+    targets; dropped mass folds into the next kept sample, so kept
+    cumulative weights are exactly the input's — compression adds zero rank
+    error, it only widens gaps (which ``sketch_rank_bound`` reads off the
+    weights).  Targets t_j = j*(n//s) + min(j, n%s) avoid the j*n overflow
+    while still summing the remainder in; duplicate selections become
+    weight-0 lanes, and for n <= budget every element is kept exactly.
+    """
+    cum = jnp.cumsum(weights)
+    j = jnp.arange(1, budget + 1, dtype=jnp.int32)
+    q_, r_ = n // budget, n % budget
+    targets = j * q_ + jnp.minimum(j, r_)
+    idx = jnp.searchsorted(cum, targets, side="left")
+    idx = jnp.minimum(idx, values.shape[0] - 1)
+    kept_cum = cum[idx]
+    new_w = jnp.diff(kept_cum, prepend=jnp.int32(0))
+    return values[idx], new_w.astype(jnp.int32)
+
+
+def sketch_update(state: SketchState, batch: jax.Array) -> SketchState:
+    """Fold one batch into the resident summary: sort the BATCH only, tile-
+    merge the two sorted runs, re-compress to the static budget.
+
+    Pure jnp with static shapes (state budget + batch length fix the trace),
+    so the whole update jits and the state stays device-resident.  Per-batch
+    cost is O(n_b log n_b + s log s) — the full-data sort GK Select would
+    otherwise pay per query is never rebuilt.
+    """
+    budget = state.values.shape[0]
+    batch = batch.reshape(-1).astype(state.values.dtype)
+    b_vals, b_wts, m_b = _batch_run(batch, budget)
+
+    # tile-merge of the two sorted runs (argsort of 2s lanes, not a data sort)
+    v = jnp.concatenate([state.values, b_vals])
+    w = jnp.concatenate([state.weights, b_wts])
+    order = jnp.argsort(v)
+    v, w = v[order], w[order]
+
+    n_new = state.n + jnp.int32(batch.shape[0])
+    v, w = _compress(v, w, n_new, budget)
+
+    # Undercount bound: resident samples miss at most the batch's stride of
+    # new mass (m_b - 1); batch samples miss at most the resident summary's
+    # widest gap.  MAX-composition across the two sides — see the
+    # SketchState docstring.
+    gap = jnp.max(state.weights)
+    new_slack = jnp.where(
+        state.n > 0,
+        jnp.maximum(state.slack + jnp.int32(m_b - 1), gap),
+        jnp.int32(m_b - 1))
+    return SketchState(values=v, weights=w, n=n_new, slack=new_slack)
+
+
+def sketch_merge(a: SketchState, b: SketchState) -> SketchState:
+    """Merge two stream summaries (mergeable-summaries property): concat the
+    sorted runs, re-compress to a's budget.  Each side's samples can miss at
+    most the OTHER side's widest gap, once — slacks compose by max(own +
+    other's gap), not by sum."""
+    if a.values.shape != b.values.shape:
+        raise ValueError(f"sketch budgets differ: {a.values.shape} vs "
+                         f"{b.values.shape}")
+    budget = a.values.shape[0]
+    v = jnp.concatenate([a.values, b.values])
+    w = jnp.concatenate([a.weights, b.weights])
+    order = jnp.argsort(v)
+    v, w = v[order], w[order]
+    n_new = a.n + b.n
+    v, w = _compress(v, w, n_new, budget)
+    gap_a = jnp.max(a.weights)
+    gap_b = jnp.max(b.weights)
+    slack = jnp.maximum(
+        jnp.where(b.n > 0, a.slack + gap_b, a.slack),
+        jnp.where(a.n > 0, b.slack + gap_a, b.slack))
+    return SketchState(values=v, weights=w, n=n_new, slack=slack)
+
+
+def sketch_query_rank(state: SketchState, k) -> jax.Array:
+    """Value whose rank is within ``sketch_rank_bound(state)`` of ``k``
+    (1-based), O(s).  Integer arithmetic throughout — exact to 2^31."""
+    cum = jnp.cumsum(state.weights)
+    est = cum + state.slack // 2
+    ki = jnp.asarray(k).astype(jnp.int32)
+    # weight-0 lanes are sentinel padding / compression duplicates: never
+    # let one win the argmin (a +inf sentinel pivot would poison GK Select)
+    err = jnp.where(state.weights > 0, jnp.abs(est - ki),
+                    jnp.int32(jnp.iinfo(jnp.int32).max))
+    return state.values[jnp.argmin(err)]
+
+
+def sketch_rank_bound(state: SketchState) -> jax.Array:
+    """Tracked upper bound on ``sketch_query_rank``'s rank error: undercount
+    midpoint (slack/2) + gap resolution (max weight) + rounding.  The warm
+    engine sizes candidate caps from this, keeping exactness unconditional
+    no matter how the stream arrived."""
+    return state.slack // 2 + jnp.max(state.weights) + jnp.int32(2)
 
 
 # ---------------------------------------------------------------------------
@@ -222,15 +435,28 @@ class GKSketch:
         """Merge two summaries; rank errors add (<= eps*(n_a+n_b) when both
         are eps-summaries). Rank bounds of each tuple against the other sketch
         are derived by searchsorted (Agarwal et al.'s mergeable-summaries
-        merge, which is what Spark's QuantileSummaries.merge approximates)."""
+        merge, which is what Spark's QuantileSummaries.merge approximates).
+
+        The sketches need not share ``eps``: the merged summary tracks
+        max(eps_a, eps_b), the tightest bound the merge can still honour —
+        silently keeping the smaller eps would claim a rank guarantee the
+        coarser input never provided."""
         if self._buf:
             self.flush()
         if other._buf:
             other.flush()
+        eps = max(self.eps, other.eps)
         if other.size == 0:
-            return self
+            if eps == self.eps:
+                return self
+            # never mutate the receiver: a widened-eps result is a new sketch
+            out = GKSketch(eps, self.head_size, self.compress_threshold,
+                           self.adaptive_head, self.alpha)
+            out.v, out.g, out.delta, out.n = (self.v.copy(), self.g.copy(),
+                                              self.delta.copy(), self.n)
+            return out
         if self.size == 0:
-            out = GKSketch(self.eps, self.head_size, self.compress_threshold,
+            out = GKSketch(eps, self.head_size, self.compress_threshold,
                            self.adaptive_head, self.alpha)
             out.v, out.g, out.delta, out.n = (other.v.copy(), other.g.copy(),
                                               other.delta.copy(), other.n)
@@ -258,7 +484,7 @@ class GKSketch:
         rmax = np.maximum.accumulate(rmax)
         g = np.diff(np.concatenate([[0], rmin]))
         delta = np.maximum(0, rmax - rmin)
-        out = GKSketch(self.eps, self.head_size, self.compress_threshold,
+        out = GKSketch(eps, self.head_size, self.compress_threshold,
                        self.adaptive_head, self.alpha)
         out.v, out.g, out.delta = v, g.astype(np.int64), delta.astype(np.int64)
         out.n = self.n + other.n

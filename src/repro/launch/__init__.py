@@ -1,2 +1,6 @@
 """Launch layer: production meshes, sharding rules, step builders, dry-run,
-roofline analysis, train/serve drivers."""
+roofline analysis, train/serve drivers, and the streaming quantile service
+(``quantile_service.QuantileService`` / ``StreamingCalibrator``)."""
+from .quantile_service import QuantileService, StreamingCalibrator
+
+__all__ = ["QuantileService", "StreamingCalibrator"]

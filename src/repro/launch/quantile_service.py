@@ -1,0 +1,254 @@
+"""QuantileService: streaming quantile queries over live data streams.
+
+The paper's headline is that GK Select answers an exact quantile in a
+constant number of actions; its most expensive action is sketch
+construction — a full per-shard sort.  A query-per-job system pays that
+sort on EVERY query.  This service keeps, per stream (DESIGN.md §6):
+
+  * a persistent device-resident ``SketchState`` — updated incrementally as
+    batches arrive (``core.sketch.sketch_update``: sort the batch, tile-
+    merge, re-compress to the static budget), and
+  * the raw batches themselves (device arrays), the population that exact
+    queries count/extract over.
+
+Queries then come in two costs:
+
+  ``approx(q)``  O(s) from the sketch alone — no data pass at all.
+  ``exact(q)``   WARM GK Select: the pivot comes from the live sketch, so
+                 the sketch phase — and its full-data sort — is skipped;
+                 only count+extract (one streaming pass per chunk, fused to
+                 a single HBM stream with ``fused=True``) and resolve run.
+                 3 actions -> 2 for every query after the data arrived.
+
+Exactness is unconditional: the candidate cap is sized from the sketch's
+*tracked* rank bound (``sketch_rank_bound``), and if a pathological stream
+ever pushes the realized rank gap past the cap the service retries with the
+exact gap — so ``exact`` is always bit-identical to the cold path (which is
+bit-identical to a full sort).
+
+This is the single-process face of the engine (chunks play the role of
+shards, exactly like ``core.select``); the sharded warm path is
+``distributed_quantile_multi(..., pivots=..., cap=...)``.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import local_ops
+from repro.core.sketch import (SketchState, record_sketch_sort, sketch_budget,
+                               sketch_init, sketch_query_rank,
+                               sketch_rank_bound, sketch_update)
+
+
+def _round_up(x: int, multiple: int) -> int:
+    return -(-x // multiple) * multiple
+
+
+# Jitted phase kernels live at module level (not on the service instance):
+# an lru_cache keyed on ``self`` would pin every service — and its buffered
+# device chunks — for the process lifetime.  jax.jit's own shape-keyed cache
+# handles per-batch-shape specialization.
+_update_jit = jax.jit(sketch_update)
+_query_jit = jax.jit(sketch_query_rank)
+
+
+@functools.lru_cache(maxsize=None)
+def _chunk_fn(cap: int, fused: bool):
+    """Per-chunk count+extract with a static candidate cap: the warm query's
+    only data pass.  fused=True routes through the single-pass Pallas kernel
+    seam (one HBM stream per chunk); the kernel takes the pivot as a plain
+    operand, so externally-supplied (warm) pivots need no retrace."""
+    if fused:
+        from repro.kernels import ops as kernel_ops
+
+        def fn(x, pivot):
+            return kernel_ops.fused_count_extract(x, pivot, cap)
+        return fn   # kernel wrapper dispatches (and ticks) itself
+
+    def fn(x, pivot):
+        return local_ops.fused_count_extract(x, pivot, cap)
+    return jax.jit(fn)
+
+
+@functools.lru_cache(maxsize=None)
+def _resolve_fn(cap: int):
+    def fn(pivot, k, counts, belows, aboves):
+        lt = sum(c[0] for c in counts)
+        eq = sum(c[1] for c in counts)
+        below = jnp.concatenate(belows)
+        above = jnp.concatenate(aboves)
+        return (local_ops.resolve(pivot, k, lt, eq, below, above, cap),
+                lt, eq)
+    return jax.jit(fn)
+
+
+@dataclasses.dataclass
+class _Stream:
+    state: SketchState
+    chunks: List[jax.Array]
+    n: int
+
+
+class QuantileService:
+    """Owns a live ``SketchState`` + buffered chunks per named stream.
+
+    All device work goes through shape-keyed jitted kernels, so a stream fed
+    by fixed-size batches (the serving case: one activation batch per decode
+    step) traces each phase once and replays it for the stream's lifetime.
+    """
+
+    def __init__(self, *, eps: float = 0.01, budget: Optional[int] = None,
+                 dtype=jnp.float32, fused: bool = False):
+        if not 0.0 < eps < 1.0:
+            raise ValueError(f"eps must be in (0,1), got {eps}")
+        self.eps = eps
+        self.budget = int(budget) if budget else sketch_budget(eps)
+        self.dtype = jnp.dtype(dtype)
+        self.fused = fused
+        self._streams: Dict[str, _Stream] = {}
+
+    # -- stream lifecycle ---------------------------------------------------
+
+    def stream(self, name: str) -> _Stream:
+        if name not in self._streams:
+            self._streams[name] = _Stream(
+                state=sketch_init(self.budget, self.dtype), chunks=[], n=0)
+        return self._streams[name]
+
+    def streams(self):
+        return sorted(self._streams)
+
+    def drop_stream(self, name: str) -> None:
+        self._streams.pop(name, None)
+
+    def stream_count(self, name: str) -> int:
+        return self.stream(name).n
+
+    def rank_bound(self, name: str) -> int:
+        """The live sketch's tracked worst-case query rank error."""
+        return int(sketch_rank_bound(self.stream(name).state))
+
+    # -- ingest -------------------------------------------------------------
+
+    def ingest(self, name: str, batch) -> None:
+        """Fold one batch into the stream: buffer the raw values and advance
+        the resident sketch (ONE sort, of the batch only — the per-query
+        sketch sort this state exists to delete)."""
+        st = self.stream(name)
+        batch = jnp.asarray(batch).reshape(-1).astype(self.dtype)
+        if batch.size == 0:
+            return
+        st.chunks.append(batch)
+        st.n += int(batch.size)
+        record_sketch_sort()            # sketch_update sorts the batch
+        st.state = _update_jit(st.state, batch)
+
+    # -- queries ------------------------------------------------------------
+
+    def approx(self, name: str, q: float):
+        """Approximate q-quantile from the sketch alone: O(s), zero passes
+        over the data; rank error <= ``rank_bound(name)``."""
+        st = self.stream(name)
+        if st.n == 0:
+            raise ValueError(f"stream {name!r} is empty")
+        k = local_ops.target_rank(st.n, q)
+        return _query_jit(st.state, k)
+
+    def exact(self, name: str, q: float, *, warm: bool = True):
+        """EXACT q-quantile of everything ingested so far.
+
+        warm=True (default): pivot straight from the live sketch — no
+        sketch-phase sort; 2 of the paper's 3 actions.  warm=False is the
+        cold reference path: rebuild the sketch from the buffered chunks
+        (one sort per chunk) exactly as a stateless job would, then run the
+        same count+extract+resolve.  Both are exact, hence bit-identical.
+        """
+        st = self.stream(name)
+        if st.n == 0:
+            raise ValueError(f"stream {name!r} is empty")
+        k = local_ops.target_rank(st.n, q)
+
+        if warm:
+            pivot = _query_jit(st.state, k)
+            # cap from the TRACKED bound (+inf-safe), padded to a stable
+            # 128-lane multiple so growing streams reuse the same trace
+            bound = int(sketch_rank_bound(st.state))
+        else:
+            pivot, bound = self._cold_pivot(st, k)
+        cap = min(st.n, _round_up(bound + 2, 128))
+        return self._count_extract_resolve(st, k, pivot, cap)
+
+    # -- internals ----------------------------------------------------------
+
+    def _cold_pivot(self, st: _Stream, k: int):
+        """The stateless job's action 1: re-sketch every buffered chunk from
+        scratch (one sort per chunk — ticks the sketch-sort counter), merge,
+        query.  This is what every query would cost without the resident
+        state."""
+        cold = sketch_init(self.budget, self.dtype)
+        for chunk in st.chunks:
+            record_sketch_sort()
+            cold = _update_jit(cold, chunk)
+        pivot = _query_jit(cold, k)
+        return pivot, int(sketch_rank_bound(cold))
+
+    def _count_extract_resolve(self, st: _Stream, k: int, pivot, cap: int):
+        """Actions 2+3 over the buffered chunks (chunks == shards of the
+        single-process engine).  Retries with a wider cap in the
+        (tracked-bound-violating) pathological case so exactness never
+        depends on the stream's history."""
+        counts, belows, aboves = [], [], []
+        for chunk in st.chunks:
+            cap_c = min(chunk.shape[0], cap)
+            c, b, a = _chunk_fn(cap_c, self.fused)(chunk, pivot)
+            counts.append(c)
+            belows.append(b)
+            aboves.append(a)
+        out, lt, eq = _resolve_fn(cap)(
+            jnp.asarray(pivot), jnp.int32(k), tuple(counts), tuple(belows),
+            tuple(aboves))
+        need = max(int(lt) - k + 1, k - (int(lt) + int(eq)))
+        if need > cap:     # tracked bound violated — impossible by the
+            # invariant, but exactness must not hinge on it: widen and rerun
+            return self._count_extract_resolve(
+                st, k, pivot, min(st.n, _round_up(need + 2, 128)))
+        return out
+
+
+class StreamingCalibrator:
+    """int8 activation calibration that maintains running |activation|
+    sketches across decode steps (DESIGN.md §6).
+
+    The pre-streaming flow re-ran GK Select's full 3-action job on a
+    re-concatenated activation history every time a scale was needed; this
+    folds each step's activations into a persistent per-tensor stream
+    (``observe``) and answers scales either approximately in O(s)
+    (``approx_scale``) or exactly with a WARM 2-action query (``scale``) —
+    no sketch-phase sort ever happens at scale-query time."""
+
+    def __init__(self, q: float = 0.999, *, eps: float = 0.01,
+                 fused: bool = False):
+        self.q = q
+        self.service = QuantileService(eps=eps, fused=fused)
+
+    def observe(self, name: str, activations) -> None:
+        acts = jnp.abs(jnp.asarray(activations).astype(jnp.float32))
+        self.service.ingest(name, acts)
+
+    def scale(self, name: str):
+        """Exact symmetric int8 scale (the paper's reproducibility case):
+        warm GK Select over everything observed so far."""
+        return self.service.exact(name, self.q)
+
+    def approx_scale(self, name: str):
+        """O(s) scale estimate from the sketch alone (rank error within
+        ``service.rank_bound(name)``) — for per-step monitoring."""
+        return self.service.approx(name, self.q)
+
+    def observed(self, name: str) -> int:
+        return self.service.stream_count(name)

@@ -2,9 +2,19 @@
 exact-quantile int8 activation calibration (the paper's primitive applied to
 quantized serving).
 
+Calibration comes in two shapes:
+
+  * one-shot — ``calibrate_int8_scale`` / ``calibrate_int8_scales`` run a
+    full GK Select job over a captured activation tensor;
+  * streaming — pass a ``StreamingCalibrator`` to ``generate``: each decode
+    step's activations fold into a persistent per-stream ``SketchState``
+    (``launch.quantile_service``), and scale queries run GK Select WARM —
+    the sketch phase (the full sort) is never re-paid per query
+    (DESIGN.md §6).
+
 Usage:
   PYTHONPATH=src python -m repro.launch.serve --arch mamba2-1.3b --reduced \
-      --prompt-len 32 --gen-len 16 --batch 4
+      --prompt-len 32 --gen-len 16 --batch 4 [--calibrate]
 """
 from __future__ import annotations
 
@@ -18,6 +28,7 @@ import numpy as np
 
 from repro.configs import get_config
 from repro.core import exact_quantile_rank, local_ops
+from repro.launch.quantile_service import QuantileService, StreamingCalibrator
 from repro.models import model
 from repro.models.config import ModelConfig
 from repro.optim.quantile_ops import channelwise_exact_quantile
@@ -52,8 +63,14 @@ def calibrate_int8_scales(activations: jax.Array, axis: int = -1,
 
 def generate(cfg: ModelConfig, params, prompts: jax.Array, *,
              gen_len: int, extras: Optional[Dict] = None,
-             greedy: bool = True, seed: int = 0):
-    """Batched prefill + autoregressive decode."""
+             greedy: bool = True, seed: int = 0,
+             calibrator: Optional[StreamingCalibrator] = None):
+    """Batched prefill + autoregressive decode.
+
+    ``calibrator`` observes the output activations (logits) of the prefill
+    and every decode step into a running per-stream sketch — the streaming
+    replacement for capturing an activation history and re-sketching it per
+    calibration query."""
     B, S = prompts.shape
     batch = {"tokens": prompts}
     if extras:
@@ -63,6 +80,8 @@ def generate(cfg: ModelConfig, params, prompts: jax.Array, *,
     decode_fn = jax.jit(lambda p, t, c, cl: model.decode_step(p, t, c, cl, cfg))
 
     logits, cache = prefill_fn(params, batch)
+    if calibrator is not None:
+        calibrator.observe("logits", logits)
     key = jax.random.PRNGKey(seed)
     out = []
     tok = jnp.argmax(logits, -1)[:, None].astype(jnp.int32)
@@ -70,6 +89,8 @@ def generate(cfg: ModelConfig, params, prompts: jax.Array, *,
     for i in range(gen_len - 1):
         cache_len = jnp.full((B,), S + i, jnp.int32)
         logits, cache = decode_fn(params, tok, cache, cache_len)
+        if calibrator is not None:
+            calibrator.observe("logits", logits)
         if greedy:
             tok = jnp.argmax(logits, -1)[:, None].astype(jnp.int32)
         else:
@@ -86,6 +107,9 @@ def main() -> None:
     ap.add_argument("--prompt-len", type=int, default=32)
     ap.add_argument("--gen-len", type=int, default=16)
     ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--calibrate", action="store_true",
+                    help="maintain a running logits sketch across decode "
+                         "steps and report the exact (warm) int8 scale")
     args = ap.parse_args()
 
     cfg = get_config(args.arch)
@@ -102,12 +126,19 @@ def main() -> None:
         extras["frames"] = jnp.zeros(
             (args.batch, max(1, args.prompt_len // cfg.enc_seq_divisor),
              cfg.d_model), jnp.float32)
+    calibrator = StreamingCalibrator(q=0.999) if args.calibrate else None
     t0 = time.time()
-    toks = generate(cfg, params, prompts, gen_len=args.gen_len, extras=extras)
+    toks = generate(cfg, params, prompts, gen_len=args.gen_len, extras=extras,
+                    calibrator=calibrator)
     dt = time.time() - t0
     print(f"generated {toks.shape} in {dt:.2f}s "
           f"({args.batch * args.gen_len / dt:.1f} tok/s)")
     print(np.asarray(toks[:2, :8]))
+    if calibrator is not None:
+        print(f"streaming calibration: {calibrator.observed('logits')} "
+              f"|logit| samples, exact p99.9 scale (warm) = "
+              f"{float(calibrator.scale('logits')):.6f} "
+              f"(approx O(s) = {float(calibrator.approx_scale('logits')):.6f})")
 
 
 if __name__ == "__main__":

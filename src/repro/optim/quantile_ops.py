@@ -72,9 +72,12 @@ def pytree_exact_quantile(tree, q: float, *, eps: float = 1e-3,
     weights = jnp.concatenate(all_wts)
     order = jnp.argsort(values)
     v_s, w_s = values[order], weights[order]
-    cum = jnp.cumsum(w_s).astype(jnp.float32)
-    est = cum + total_slack / 2.0
-    pivot = v_s[jnp.argmin(jnp.abs(est - k))]
+    # int32 rank arithmetic: float32 cannot represent ranks above 2^24, and
+    # billion-element pytrees are exactly this path's target (same fix as
+    # sketch.query_merged_sketch).
+    cum = jnp.cumsum(w_s)
+    est = cum + jnp.int32(total_slack // 2)
+    pivot = v_s[jnp.argmin(jnp.abs(est - jnp.int32(k)))]
 
     # ---- Phase 2: counts (pad lanes are +inf: they never count as < or ==
     # unless pivot is +inf itself, which the sketch cannot return since +inf

@@ -1,0 +1,12 @@
+"""Shared rank-semantics helper for the sketch/service suites."""
+import numpy as np
+
+
+def rank_error(flat_sorted, value, k):
+    """Distance from rank k to ``value``'s rank interval in the sorted data
+    (0 when k lands inside the tie range of ``value``)."""
+    r_lo = np.searchsorted(flat_sorted, value, side="left") + 1
+    r_hi = np.searchsorted(flat_sorted, value, side="right")
+    if r_lo <= k <= r_hi:
+        return 0
+    return min(abs(r_lo - k), abs(r_hi - k))

@@ -1,0 +1,209 @@
+"""QuantileService / StreamingCalibrator: warm exact queries must be
+bit-identical to the cold path and the numpy oracle while dispatching ZERO
+sketch-phase sorts; approximate queries must respect the tracked rank bound
+(DESIGN.md §6)."""
+import math
+
+import numpy as np
+import pytest
+
+from _rank_util import rank_error
+
+from repro.core import reset_sketch_sorts, sketch_sorts
+from repro.launch import QuantileService, StreamingCalibrator
+
+
+class TestQuantileService:
+    QS = [0.001, 0.1, 0.5, 0.9, 0.999]
+
+    def _fill(self, svc, rng, n_chunks=8, n_chunk=2048, name="s"):
+        chunks = [rng.normal(size=n_chunk).astype(np.float32)
+                  for _ in range(n_chunks)]
+        for c in chunks:
+            svc.ingest(name, c)
+        return np.concatenate(chunks)
+
+    @pytest.mark.parametrize("fused", [False, True])
+    def test_warm_exact_bit_identical_zero_sorts(self, fused):
+        rng = np.random.default_rng(0)
+        svc = QuantileService(eps=0.01, fused=fused)
+        x = self._fill(svc, rng)
+        flat = np.sort(x)
+        n = x.size
+        for q in self.QS:
+            k = min(n, max(1, math.ceil(q * n)))
+            want = float(flat[k - 1])
+            reset_sketch_sorts()
+            warm = float(svc.exact("s", q))
+            assert sketch_sorts() == 0, "warm query sorted for its sketch"
+            cold = float(svc.exact("s", q, warm=False))
+            assert warm == cold == want, (q, warm, cold, want)
+
+    def test_cold_path_sorts_every_chunk(self):
+        rng = np.random.default_rng(1)
+        svc = QuantileService(eps=0.01)
+        self._fill(svc, rng, n_chunks=6)
+        reset_sketch_sorts()
+        svc.exact("s", 0.5, warm=False)
+        assert sketch_sorts() == 6
+
+    def test_approx_within_tracked_bound(self):
+        rng = np.random.default_rng(2)
+        svc = QuantileService(eps=0.02)
+        x = self._fill(svc, rng, n_chunks=10)
+        flat = np.sort(x)
+        n = x.size
+        bound = svc.rank_bound("s")
+        assert bound <= 0.02 * n
+        for q in self.QS:
+            k = min(n, max(1, math.ceil(q * n)))
+            assert rank_error(flat, float(svc.approx("s", q)), k) <= bound
+
+    def test_uneven_batches_and_growth(self):
+        """Chunks of different sizes (ragged ingest) and queries interleaved
+        with ingest stay exact."""
+        rng = np.random.default_rng(3)
+        svc = QuantileService(eps=0.01)
+        seen = []
+        for i, size in enumerate([100, 4096, 33, 2048, 1000, 7]):
+            b = rng.normal(size=size).astype(np.float32)
+            svc.ingest("s", b)
+            seen.append(b)
+            x = np.concatenate(seen)
+            flat = np.sort(x)
+            k = max(1, math.ceil(0.9 * x.size))
+            assert float(svc.exact("s", 0.9)) == float(flat[k - 1]), i
+
+    def test_streams_are_independent(self):
+        rng = np.random.default_rng(4)
+        svc = QuantileService(eps=0.01)
+        a = rng.normal(size=1024).astype(np.float32)
+        b = (rng.normal(size=2048) * 100).astype(np.float32)
+        svc.ingest("a", a)
+        svc.ingest("b", b)
+        ka = max(1, math.ceil(0.5 * a.size))
+        kb = max(1, math.ceil(0.5 * b.size))
+        assert float(svc.exact("a", 0.5)) == float(np.sort(a)[ka - 1])
+        assert float(svc.exact("b", 0.5)) == float(np.sort(b)[kb - 1])
+        assert svc.streams() == ["a", "b"]
+        svc.drop_stream("a")
+        assert svc.streams() == ["b"]
+
+    def test_tie_heavy_stream_exact(self):
+        rng = np.random.default_rng(5)
+        svc = QuantileService(eps=0.02)
+        chunks = [rng.zipf(2.5, size=1500).clip(max=50).astype(np.float32)
+                  for _ in range(6)]
+        for c in chunks:
+            svc.ingest("z", c)
+        x = np.concatenate(chunks)
+        flat = np.sort(x)
+        for q in [0.25, 0.5, 0.9]:
+            k = max(1, math.ceil(q * x.size))
+            assert float(svc.exact("z", q)) == float(flat[k - 1])
+
+    def test_empty_stream_raises(self):
+        svc = QuantileService()
+        with pytest.raises(ValueError):
+            svc.exact("nope", 0.5)
+        with pytest.raises(ValueError):
+            svc.approx("nope", 0.5)
+
+
+class TestStreamingCalibrator:
+    def test_scale_matches_oneshot_oracle(self):
+        """The streaming scale == the exact p-quantile of |everything
+        observed|, with zero sketch-phase sorts at query time."""
+        rng = np.random.default_rng(10)
+        cal = StreamingCalibrator(q=0.999, eps=0.01)
+        steps = [rng.normal(size=(4, 500)).astype(np.float32) * 0.25
+                 for _ in range(9)]
+        for s in steps:
+            cal.observe("logits", s)
+        allabs = np.sort(np.abs(np.concatenate([s.ravel() for s in steps])))
+        k = max(1, math.ceil(0.999 * allabs.size))
+        reset_sketch_sorts()
+        assert float(cal.scale("logits")) == float(allabs[k - 1])
+        assert sketch_sorts() == 0
+        assert cal.observed("logits") == allabs.size
+        # the O(s) approx is within the tracked bound
+        approx = float(cal.approx_scale("logits"))
+        bound = cal.service.rank_bound("logits")
+        r = np.searchsorted(allabs, approx, side="right")
+        assert abs(r - k) <= bound
+
+    def test_generate_wiring(self):
+        """serve.generate(calibrator=...) observes prefill + every decode
+        step's logits."""
+        import jax
+        from repro.configs import get_config
+        from repro.launch.serve import generate
+        from repro.models import model
+
+        cfg = get_config("stablelm-1.6b").reduced()
+        params = model.init_params(cfg, jax.random.PRNGKey(0))
+        prompts = jax.random.randint(jax.random.PRNGKey(1), (2, 8), 0,
+                                     cfg.vocab)
+        cal = StreamingCalibrator(q=0.99)
+        gen_len = 4
+        toks = generate(cfg, params, prompts, gen_len=gen_len, calibrator=cal)
+        assert toks.shape == (2, gen_len)
+        # one observation per prefill + decode step, B * vocab logits each
+        assert cal.observed("logits") == gen_len * 2 * cfg.vocab
+        reset_sketch_sorts()
+        scale = float(cal.scale("logits"))
+        assert sketch_sorts() == 0
+        assert scale > 0
+
+
+class TestWarmShardedEngine:
+    def test_external_pivots_skip_sketch_phase(self):
+        """distributed_quantile_multi(pivots=, cap=) — the sharded warm path
+        — is exact with pivots from a streamed SketchState, on a non-pow2
+        mesh, fused and unfused.  Run in a subprocess (dry-run rule: the
+        main pytest process keeps the single real device)."""
+        import os
+        import subprocess
+        import sys
+        import textwrap
+        code = textwrap.dedent("""
+            import os
+            os.environ["XLA_FLAGS"] = \\
+                "--xla_force_host_platform_device_count=6"
+            import numpy as np, jax, jax.numpy as jnp
+            from repro.core import (distributed_quantile_multi, local_ops,
+                                    sketch_budget, sketch_init,
+                                    sketch_query_rank, sketch_rank_bound,
+                                    sketch_update)
+            from repro.launch.mesh import make_mesh
+            P = 6
+            mesh = make_mesh((P,), ("data",))
+            rng = np.random.default_rng(0)
+            n = P * 2048
+            x = rng.normal(size=n).astype(np.float32)
+            flat = np.sort(x)
+            qs = (0.05, 0.5, 0.95)
+            wants = [float(flat[min(n, max(1, int(np.ceil(q * n)))) - 1])
+                     for q in qs]
+            st = sketch_init(sketch_budget(0.01))
+            for part in np.split(x, 8):
+                st = sketch_update(st, jnp.asarray(part))
+            ks = [local_ops.target_rank(n, q) for q in qs]
+            pivots = jnp.stack([sketch_query_rank(st, k) for k in ks])
+            cap = int(sketch_rank_bound(st)) + 2
+            for fused in (False, True):
+                got = distributed_quantile_multi(
+                    jnp.asarray(x), qs, mesh, pivots=pivots, cap=cap,
+                    fused=fused)
+                assert [float(v) for v in np.asarray(got)] == wants, fused
+            print("WARM-SHARDED-OK")
+        """)
+        repo = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+        env = dict(os.environ)
+        env["PYTHONPATH"] = os.path.join(repo, "src")
+        env.pop("XLA_FLAGS", None)
+        out = subprocess.run([sys.executable, "-c", code],
+                             capture_output=True, text=True, env=env,
+                             timeout=600)
+        assert out.returncode == 0, out.stderr[-3000:]
+        assert "WARM-SHARDED-OK" in out.stdout

@@ -1,6 +1,7 @@
 """GK sketch layer: invariants (paper Eq. 1), space bound (Eq. 2), query rank
-error, merges (foldLeft vs tree), and the TPU sample sketch's eps*n bound —
-including hypothesis property tests."""
+error, merges (foldLeft vs tree), the TPU sample sketch's eps*n bound, and
+the streaming SketchState (update over arbitrary batch splits == one-shot,
+within eps*n) — including hypothesis property tests."""
 import copy
 import math
 
@@ -10,17 +11,14 @@ import jax.numpy as jnp
 import pytest
 from _hypothesis_compat import given, settings, st
 
+from _rank_util import rank_error
+
 from repro.core import (GKSketch, merge_fold_left, merge_tree,
                         local_sample_sketch, query_merged_sketch,
-                        sample_sketch_params)
-
-
-def rank_error(flat_sorted, value, k):
-    r_lo = np.searchsorted(flat_sorted, value, side="left") + 1
-    r_hi = np.searchsorted(flat_sorted, value, side="right")
-    if r_lo <= k <= r_hi:
-        return 0
-    return min(abs(r_lo - k), abs(r_hi - k))
+                        sample_sketch_params,
+                        SketchState, sketch_budget, sketch_init,
+                        sketch_update, sketch_merge, sketch_query_rank,
+                        sketch_rank_bound)
 
 
 class TestGKSketch:
@@ -76,6 +74,44 @@ class TestGKSketch:
         for q in [0.01, 0.5, 0.99]:
             k = min(n, max(1, math.ceil(q * n)))
             assert rank_error(flat, merged.query(q), k) <= eps * n
+
+    def test_merge_tree_invariant_eq1(self):
+        """Paper Eq. 1 must survive the driver-side tree reduce: after
+        merge_tree of P per-partition sketches, g + delta <= 2*eps*n for
+        every interior tuple."""
+        rng = np.random.default_rng(21)
+        eps, n, P = 0.02, 64_000, 16
+        x = rng.normal(size=n)
+        sks = []
+        for part in x.reshape(P, -1):
+            s = GKSketch(eps, head_size=1000, compress_threshold=300)
+            s.insert_batch(part)
+            s.flush()
+            sks.append(s)
+        merged = merge_tree(sks)
+        assert merged.n == n
+        assert np.all((merged.g + merged.delta)[1:-1]
+                      <= math.floor(2 * eps * merged.n))
+
+    def test_merge_tracks_max_eps(self):
+        """Merging sketches with different eps must not claim the tighter
+        bound: the merged summary tracks max(eps_a, eps_b)."""
+        rng = np.random.default_rng(22)
+        a = GKSketch(0.01, head_size=500, compress_threshold=200)
+        b = GKSketch(0.05, head_size=500, compress_threshold=200)
+        x = rng.normal(size=20_000)
+        a.insert_batch(x[:10_000])
+        b.insert_batch(x[10_000:])
+        merged = a.merge(b)
+        assert merged.eps == 0.05
+        assert merged.n == 20_000
+        flat = np.sort(x)
+        k = 10_000
+        assert rank_error(flat, merged.query(0.5), k) <= 0.05 * 20_000 + 1
+        # empty-side merges propagate the max too
+        empty = GKSketch(0.2)
+        assert empty.merge(a).eps == 0.2
+        assert a.merge(GKSketch(0.2)).eps == 0.2
 
     def test_modified_spark_gk_adaptive_head(self):
         """Paper §IV-E3: geometric buffer restores classical asymptotics —
@@ -136,3 +172,128 @@ class TestSampleSketch:
             pivot = float(query_merged_sketch(vals.ravel(), wts.ravel(),
                                               jnp.int32(k), 8, m))
             assert rank_error(flat, pivot, k) <= eps * n + 1
+
+
+def _stream_rank_error(x, splits, eps, qs):
+    """Stream x over the given batch splits, return per-q rank errors for the
+    streamed state, the one-shot state, and the tracked bound."""
+    n = x.size
+    budget = sketch_budget(eps)
+    st = sketch_init(budget, jnp.asarray(x).dtype)
+    for part in np.split(x, splits):
+        st = sketch_update(st, jnp.asarray(part))
+    one = sketch_update(sketch_init(budget, jnp.asarray(x).dtype),
+                        jnp.asarray(x))
+    flat = np.sort(x)
+    errs = []
+    for q in qs:
+        k = min(n, max(1, math.ceil(q * n)))
+        errs.append((rank_error(flat, float(sketch_query_rank(st, k)), k),
+                     rank_error(flat, float(sketch_query_rank(one, k)), k)))
+    return st, errs, int(sketch_rank_bound(st))
+
+
+class TestSketchState:
+    """Streaming sketch state: incremental updates over ANY batch split must
+    answer every query within the same eps*n window as a one-shot sketch of
+    the concatenation (DESIGN.md §6)."""
+
+    QS = [0.001, 0.01, 0.1, 0.25, 0.5, 0.75, 0.9, 0.99, 0.999]
+
+    @pytest.mark.parametrize("R", [1, 3, 8, 32])
+    def test_streaming_matches_oneshot(self, R):
+        rng = np.random.default_rng(100 + R)
+        n, eps = 120_000, 0.02
+        x = rng.normal(size=n).astype(np.float32)
+        splits = (np.sort(rng.choice(np.arange(1, n), R - 1, replace=False))
+                  if R > 1 else [])
+        st, errs, bound = _stream_rank_error(x, splits, eps, self.QS)
+        assert int(st.n) == n
+        assert bound <= eps * n          # the tracked bound itself holds
+        for streamed_err, oneshot_err in errs:
+            assert streamed_err <= eps * n
+            assert oneshot_err <= eps * n
+            assert streamed_err <= bound  # tracked bound is honest
+
+    @settings(max_examples=20, deadline=None)
+    @given(st.integers(2_000, 40_000), st.floats(0.02, 0.2),
+           st.integers(1, 12), st.integers(0, 2 ** 31 - 1))
+    def test_property_any_split(self, n, eps, R, seed):
+        rng = np.random.default_rng(seed)
+        x = rng.normal(size=n).astype(np.float32)
+        R = min(R, n)
+        splits = (np.sort(rng.choice(np.arange(1, n), R - 1, replace=False))
+                  if R > 1 else [])
+        _, errs, bound = _stream_rank_error(x, splits, eps,
+                                            [0.01, 0.5, 0.99])
+        for streamed_err, oneshot_err in errs:
+            assert streamed_err <= eps * n + 1
+            assert streamed_err <= bound + 1
+
+    def test_static_shapes_and_jit(self):
+        """The state is a fixed-budget pytree: updates jit and never change
+        shapes, whatever the stream length."""
+        eps = 0.05
+        budget = sketch_budget(eps)
+        st = sketch_init(budget)
+        upd = jax.jit(sketch_update)
+        rng = np.random.default_rng(5)
+        for _ in range(7):
+            st = upd(st, jnp.asarray(rng.normal(size=512).astype(np.float32)))
+        assert st.values.shape == (budget,)
+        assert st.weights.shape == (budget,)
+        assert st.weights.dtype == jnp.int32
+        assert int(st.n) == 7 * 512
+        assert int(jnp.sum(st.weights)) == 7 * 512   # mass conservation
+
+    def test_small_stream_is_lossless(self):
+        """n <= budget: every element is retained exactly, bound stays at
+        the rounding floor."""
+        eps = 0.1
+        x = np.arange(40, dtype=np.float32)
+        st = sketch_init(sketch_budget(eps))
+        for part in np.split(x, 4):
+            st = sketch_update(st, jnp.asarray(part))
+        for k in (1, 7, 20, 40):
+            assert float(sketch_query_rank(st, k)) == float(k - 1)
+
+    def test_merge_two_streams(self):
+        """sketch_merge == mergeable-summaries: querying the merged state is
+        within the combined tracked bound of the concatenation's ranks."""
+        rng = np.random.default_rng(6)
+        n, eps = 80_000, 0.02
+        x = rng.normal(size=n).astype(np.float32)
+        budget = sketch_budget(eps)
+        a = sketch_init(budget)
+        b = sketch_init(budget)
+        for part in np.split(x[: n // 2], 4):
+            a = sketch_update(a, jnp.asarray(part))
+        for part in np.split(x[n // 2:], 5):
+            b = sketch_update(b, jnp.asarray(part))
+        m = sketch_merge(a, b)
+        assert int(m.n) == n
+        bound = int(sketch_rank_bound(m))
+        assert bound <= eps * n
+        flat = np.sort(x)
+        for q in [0.01, 0.5, 0.99]:
+            k = min(n, max(1, math.ceil(q * n)))
+            assert rank_error(flat, float(sketch_query_rank(m, k)), k) <= bound
+
+    def test_merge_budget_mismatch_raises(self):
+        with pytest.raises(ValueError):
+            sketch_merge(sketch_init(64), sketch_init(128))
+
+    def test_duplicates_heavy_stream(self):
+        """Tie-heavy zipf stream (paper Fig. 3 regime): weight folding over
+        equal values must keep ranks consistent."""
+        rng = np.random.default_rng(8)
+        n, eps = 60_000, 0.02
+        x = rng.zipf(2.5, size=n).clip(max=1000).astype(np.float32)
+        st = sketch_init(sketch_budget(eps))
+        for part in np.split(x, 10):
+            st = sketch_update(st, jnp.asarray(part))
+        flat = np.sort(x)
+        for q in [0.1, 0.5, 0.9, 0.99]:
+            k = min(n, max(1, math.ceil(q * n)))
+            assert rank_error(flat, float(sketch_query_rank(st, k)), k) \
+                <= eps * n + 1
