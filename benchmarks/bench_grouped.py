@@ -1,0 +1,108 @@
+"""Grouped engine: one segmented job vs G per-group jobs (DESIGN.md §7).
+
+Two sides of the claim:
+
+  * structural — the per-shard HBM pass count for the G-group count+extract
+    phase is exactly 1 with the segmented kernel vs 3G for the unfused
+    per-group trio (``ops.hbm_passes``), with bit parity on every output;
+  * wall-clock — one ``gk_select_grouped`` job (one segmented sketch, one
+    fused pass, one resolve batch) vs G separate ``gk_select`` jobs over
+    the extracted per-group subsets (the loop the grouped engine deletes).
+
+Exactness is asserted against the per-group sort oracle throughout — the
+speed story is only interesting because the answers stay bit-exact.
+"""
+import os
+import time
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ops
+
+
+def timed(fn, reps=3, warmup=True):
+    if warmup:
+        jax.block_until_ready(fn())
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        out = fn()
+    jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / reps * 1e6
+
+
+def run(csv_rows):
+    from repro.core import gk_select, gk_select_grouped, local_ops
+
+    smoke = os.environ.get("REPRO_BENCH_SMOKE", "0") == "1"
+    n = 2 ** 14 if smoke else 2 ** 18
+    G = 4 if smoke else 8
+    parts = 4
+    q = 0.9
+    rng = np.random.default_rng(0)
+    x = jnp.asarray(rng.normal(size=n).astype(np.float32))
+    # balanced keys: the G-jobs baseline then shares one trace per level
+    keys = jnp.asarray(rng.permutation(np.arange(n) % G).astype(np.int32))
+    xn, kn = np.asarray(x), np.asarray(keys)
+    k_rank = local_ops.exact_target_rank(n // G, q)
+    wants = [np.sort(xn[kn == g])[k_rank - 1] for g in range(G)]
+    cap = int(np.ceil(0.01 * n)) + 2
+    pivots = jnp.asarray(np.array(wants, np.float32).reshape(G, 1))
+
+    # ---- structural: per-shard HBM passes, G groups: 3G -> 1 --------------
+    ops.reset_hbm_passes()
+    mc, mb, ma = ops.segmented_count_extract(x, keys, pivots, cap)
+    jax.block_until_ready(mc)
+    fused_passes = ops.hbm_passes()
+    assert fused_passes == 1, fused_passes
+
+    ops.reset_hbm_passes()
+    uc, ub, ua = ops.segmented_count_extract(x, keys, pivots, cap,
+                                             use_pallas=False)
+    unfused_passes = ops.hbm_passes()
+    assert unfused_passes == 3 * G, unfused_passes
+    assert (np.array_equal(mc, uc) and np.array_equal(mb, ub)
+            and np.array_equal(ma, ua)), "segmented kernel parity"
+    csv_rows.append((f"grouped/passes_{G}groups", str(fused_passes),
+                     f"unfused={unfused_passes} parity=True"))
+
+    # ---- wall-clock: one grouped job vs G per-group jobs ------------------
+    pv = x.reshape(parts, -1)
+    pk = keys.reshape(parts, -1)
+    got = np.asarray(gk_select_grouped(pv, pk, (q,), num_groups=G,
+                                       block_select=True))[:, 0]
+    assert list(got) == wants, "grouped job not exact"
+
+    per_group = [jnp.asarray(xn[kn == g]).reshape(parts, -1)
+                 for g in range(G)]
+    got_loop = [float(gk_select(p, None, k=k_rank, block_select=True))
+                for p in per_group]
+    assert got_loop == wants, "per-group jobs not exact"
+
+    us_grouped = timed(lambda: gk_select_grouped(pv, pk, (q,), num_groups=G,
+                                                 block_select=True))
+    us_gjobs = timed(lambda: [gk_select(p, None, k=k_rank,
+                                        block_select=True,
+                                        check_nans=False)
+                              for p in per_group][-1])
+    # On this CPU container the kernel runs in interpret mode, where the
+    # G-masked tile re-scores are emulated compute — wall-clock can favour
+    # the G-jobs loop; the HBM pass counts above are the TPU cost model
+    # (same caveat as bench_fused's radix rows).
+    csv_rows.append((f"grouped/us_one_job_{G}g", f"{us_grouped:.0f}",
+                     f"{G}_jobs={us_gjobs:.0f}us "
+                     f"speedup={us_gjobs / max(us_grouped, 1e-9):.2f}x "
+                     f"(interpret-mode wall-clock; passes are the model)"))
+
+    # ---- wall-clock: the multi-level matrix (G x Q) in the same one job ---
+    qs = (0.5, 0.99)
+    got_m = np.asarray(gk_select_grouped(pv, pk, qs, num_groups=G))
+    for qi, qq in enumerate(qs):
+        kr = local_ops.exact_target_rank(n // G, qq)
+        for g in range(G):
+            assert got_m[g, qi] == np.sort(xn[kn == g])[kr - 1]
+    us_gq = timed(lambda: gk_select_grouped(pv, pk, qs, num_groups=G))
+    csv_rows.append((f"grouped/us_one_job_{G}g_{len(qs)}q", f"{us_gq:.0f}",
+                     f"levels={len(qs)} exact=True"))
+    return csv_rows

@@ -15,8 +15,10 @@ ALGOS = {
     "afs": lambda p, q: afs_select(p, q),
     "jeffers": lambda p, q: jeffers_select(p, q),
     "gk_sketch": lambda p, q: approx_quantile(p, q, eps=0.01),
-    "gk_select": lambda p, q: gk_select(p, q, eps=0.01),
-    "gk_select_spec": lambda p, q: gk_select(p, q, eps=0.01, speculative=True),
+    "gk_select": lambda p, q: gk_select(p, q, eps=0.01, check_nans=False),
+    "gk_select_spec": lambda p, q: gk_select(p, q, eps=0.01,
+                                             speculative=True,
+                                             check_nans=False),
 }
 
 

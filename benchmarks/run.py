@@ -19,7 +19,7 @@ sys.path.insert(0, os.path.join(_REPO, "src"))  # `repro` package
 
 from benchmarks import (bench_scaling, bench_distributions, bench_complexity,
                         bench_rounds, bench_roofline, bench_fused,
-                        bench_multi, bench_service)
+                        bench_multi, bench_service, bench_grouped)
 
 MODULES = [
     ("fig1_2_scaling", bench_scaling),
@@ -30,6 +30,7 @@ MODULES = [
     ("fused", bench_fused),
     ("multi", bench_multi),
     ("service", bench_service),
+    ("grouped", bench_grouped),
 ]
 
 # smoke: only the modules that honour REPRO_BENCH_SMOKE sizing and finish
@@ -38,6 +39,7 @@ SMOKE_MODULES = [
     ("fused", bench_fused),
     ("multi", bench_multi),
     ("service", bench_service),
+    ("grouped", bench_grouped),
 ]
 
 

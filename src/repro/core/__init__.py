@@ -5,6 +5,8 @@ Public API:
   full_sort_quantile / psrs_sort / afs_select / jeffers_select /
   approx_quantile                               — the paper's baseline suite
   distributed_quantile / gk_select_sharded      — shard_map production path
+  distributed_quantile_grouped / gk_select_grouped
+                                                — per-group (segmented) engine
   engine (phase_sketch / phase_pivot / ...)     — phase-based engine layer
   GKSketch / merge_fold_left / merge_tree       — faithful GK sketch layer
   SketchState / sketch_init / sketch_update /
@@ -25,6 +27,8 @@ from .distributed import (distributed_quantile, distributed_quantile_multi,
                           approx_quantile_sharded, count_discard_sharded,
                           full_sort_sharded, tree_reduce_candidates,
                           gather_candidates, shard_map_compat)
+from .grouped import (gk_select_grouped, gk_select_grouped_sharded,
+                      distributed_quantile_grouped)
 from . import engine
 from . import local_ops
 
@@ -41,5 +45,7 @@ __all__ = [
     "gk_select_sharded", "gk_select_multi_sharded",
     "approx_quantile_sharded", "count_discard_sharded", "full_sort_sharded",
     "tree_reduce_candidates", "gather_candidates", "shard_map_compat",
+    "gk_select_grouped", "gk_select_grouped_sharded",
+    "distributed_quantile_grouped",
     "engine", "local_ops",
 ]

@@ -27,6 +27,8 @@ from typing import Sequence
 import jax
 from jax.sharding import Mesh, PartitionSpec as P
 
+from . import local_ops
+
 # Engine bodies + collective helpers re-exported for compatibility: every
 # pre-refactor import path (benchmarks, tests, downstream code) keeps
 # working against the phase-based engine.
@@ -48,17 +50,24 @@ def distributed_quantile(x: jax.Array, q: float, mesh: Mesh, *,
                          axis: str = "data", eps: float = 0.01,
                          method: str = "gk_select", speculative: bool = False,
                          reduce_strategy: str = "tree",
-                         fused: bool = False) -> jax.Array:
+                         fused: bool = False,
+                         check_nans: bool = True) -> jax.Array:
     """Exact (or approximate, method='approx') quantile of a 1-D array sharded
     over ``axis`` of ``mesh``.  The entry point used by optimizer/serving
     integrations.  ``fused=True`` injects the single-pass Pallas band
     extraction into the gk_select body (one HBM stream per shard for the
-    whole count+extract phase)."""
+    whole count+extract phase).
+
+    NaN policy: reject (DESIGN.md §7).  The check is one extra data pass +
+    a host sync before the job; ``check_nans=False`` opts out and transfers
+    the NaN-free contract to the caller (hot-loop querying)."""
     num_shards = mesh.shape[axis]
     if x.ndim != 1:
         raise ValueError("distributed_quantile expects a flat array")
     if x.size % num_shards:
         raise ValueError(f"size {x.size} % shards {num_shards} != 0 — pad first")
+    if check_nans:
+        local_ops.reject_nans(x, "distributed_quantile")
 
     fused_fn = None
     if fused:
@@ -93,7 +102,8 @@ def distributed_quantile_multi(x: jax.Array, qs: Sequence[float], mesh: Mesh,
                                *, axis: str = "data", eps: float = 0.01,
                                reduce_strategy: str = "tree",
                                fused: bool = False,
-                               pivots=None, cap: int = None) -> jax.Array:
+                               pivots=None, cap: int = None,
+                               check_nans: bool = True) -> jax.Array:
     """Exact quantiles at ALL the (static) levels in ``qs`` from one sharded
     job: one sketch phase, one count+extract pass per shard (fused=True
     streams the shard from HBM once for every pivot via the multi-pivot
@@ -105,6 +115,8 @@ def distributed_quantile_multi(x: jax.Array, qs: Sequence[float], mesh: Mesh,
     externally-maintained pivots (e.g. from a live ``SketchState``) skips
     the sketch phase — and its per-shard sort — entirely; ``cap`` then
     sizes the candidate buffers from the supplier's tracked rank bound.
+    NaN policy: reject; ``check_nans=False`` opts out (see
+    ``distributed_quantile``).
     """
     num_shards = mesh.shape[axis]
     qs = tuple(float(q) for q in qs)
@@ -114,6 +126,8 @@ def distributed_quantile_multi(x: jax.Array, qs: Sequence[float], mesh: Mesh,
         raise ValueError("distributed_quantile_multi expects a flat array")
     if x.size % num_shards:
         raise ValueError(f"size {x.size} % shards {num_shards} != 0 — pad first")
+    if check_nans:
+        local_ops.reject_nans(x, "distributed_quantile_multi")
 
     fused_fn = None
     if fused:

@@ -24,6 +24,11 @@ The plans:
   count_discard_sharded    AFS / Jeffers rounds (phase_count per round)
   full_sort_sharded        PSRS full-shuffle baseline
 
+``repro.core.grouped`` adds the segmented plan
+(``gk_select_grouped_sharded``): per-group phases for its sketch and
+count+extract, then the SAME phase_reduce / phase_resolve over the
+flattened (G*Q) axis — the butterfly and resolve are group-agnostic.
+
 ``repro.core.distributed`` keeps the public entry points
 (``distributed_quantile`` / ``distributed_quantile_multi``) as thin wrappers
 over these plans — signatures and semantics unchanged.

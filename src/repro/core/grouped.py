@@ -1,0 +1,322 @@
+"""Grouped exact quantiles: segmented GK Select over group keys (DESIGN.md §7).
+
+The dominant analytics pattern is per-group quantiles over many keys
+(per-tenant latency p99, per-channel calibration scales).  A per-group loop
+costs G jobs — G sketch sorts, G count passes, G reductions.  This module
+answers ALL G groups (and Q levels) in ONE job with the paper's constant
+action count:
+
+  phase 1  segmented sketch: per shard, ONE sort by ``(key, value)``
+           (two stable argsorts), then s stride samples per group segment;
+           all samples cross shards in one all_gather, group counts and
+           per-group slack in one psum.
+  phase 2  per-group pivots: each merged group summary queried for its
+           Q target ranks k_{g,q} = ceil(q * n_g) — n_g is data-dependent,
+           so the ceil runs on device in EXACT limb arithmetic
+           (``local_ops.target_rank_traced``; the host mirror is
+           ``local_ops.exact_target_rank``).
+  phase 3  segmented count+extract: (lt, eq, gt) counts plus both capped
+           candidate bands for every (group, level) pivot.  The Pallas
+           kernel ``kernels.segmented_select`` streams the shard from HBM
+           ONCE for all G*Q pivots (3*G*Q passes -> 1).
+  phase 4  the (G*Q, cap) candidate buffers ride the existing generalized
+           butterfly (``engine.phase_reduce``) — ONE butterfly per side,
+           collective count independent of G — and resolve is the existing
+           ``engine.phase_resolve`` over the flattened G*Q axis.
+
+Group semantics: group ids are the integers [0, num_groups); keys outside
+that range belong to no group and are ignored.  A group with no elements
+yields the dtype's high sentinel (+inf / int max).  NaN policy: reject
+(``local_ops.reject_nans``).
+"""
+from __future__ import annotations
+
+import functools
+import math
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, PartitionSpec as P
+
+from . import engine, local_ops
+
+
+# ---------------------------------------------------------------------------
+# static sizing
+# ---------------------------------------------------------------------------
+
+
+def grouped_sketch_samples(eps: float, n_local: int) -> int:
+    """Static per-(shard, group) sample count s for the segmented sketch.
+
+    With s = ceil(2/eps) the per-group pivot rank error is bounded by
+    eps*n + 1 regardless of how the group's mass is spread across shards:
+    each shard's stride within group g is m_pg = ceil(L_pg / s), so the
+    merged summary's undercount slack is sum_p (m_pg - 1) <= eps*n_g/2 and
+    its widest gap is <= eps*n_local/2 + 1 (DESIGN.md §7).  Clamped to the
+    shard size (s = n_local keeps full per-shard resolution: zero slack).
+    """
+    if not 0.0 < eps < 1.0:
+        raise ValueError(f"eps must be in (0,1), got {eps}")
+    return int(min(n_local, math.ceil(2.0 / eps)))
+
+
+# ---------------------------------------------------------------------------
+# per-shard primitives (vmapped by the simulator, shard_mapped by the plan)
+# ---------------------------------------------------------------------------
+
+
+def segmented_sketch_local(values: jax.Array, keys: jax.Array,
+                           num_groups: int, s: int):
+    """Per-shard segmented stride sketch: ONE sort by ``(key, value)``,
+    then ``s`` stride samples from every group's contiguous segment.
+
+    Returns ``(vals (G, s), wts (G, s) int32, counts (G,) int32,
+    slack (G,) int32)`` where ``slack`` is this shard's undercount
+    contribution (m_g - 1 for non-empty groups).  Sample t of group g is
+    the element of group-local rank min((t+1)*m_g, L_g) with m_g =
+    ceil(L_g / s); weights are the rank gaps (they sum to L_g), so merged
+    cumulative weights are exact per-shard ranks — the same invariant as
+    ``sketch.local_sample_sketch``, per segment.
+    """
+    n_i = values.shape[0]
+    gids = jnp.arange(num_groups, dtype=jnp.int32)
+    # lexicographic (key, value) via two stable argsorts
+    order = jnp.argsort(values)
+    perm = order[jnp.argsort(keys[order], stable=True)]
+    v_s = values[perm]
+    k_s = keys[perm]
+
+    valid = (k_s >= 0) & (k_s < num_groups)
+    counts = jax.ops.segment_sum(
+        valid.astype(jnp.int32),
+        jnp.where(valid, k_s, num_groups).astype(jnp.int32),
+        num_segments=num_groups + 1)[:num_groups]
+    starts = jnp.searchsorted(k_s, gids, side="left").astype(jnp.int32)
+
+    m = -(-counts // s)                              # ceil(L/s); 0 when L==0
+    t = jnp.arange(1, s + 1, dtype=jnp.int32)
+    r = jnp.minimum(t[None, :] * m[:, None], counts[:, None])   # (G, s)
+    idx = jnp.clip(starts[:, None] + jnp.maximum(r, 1) - 1, 0, n_i - 1)
+    vals = v_s[idx]
+    wts = jnp.diff(r, axis=1, prepend=jnp.zeros((num_groups, 1), jnp.int32))
+    return vals, wts, counts, jnp.maximum(m - 1, 0)
+
+
+def query_grouped_sketch(g_vals: jax.Array, g_wts: jax.Array,
+                         slack: jax.Array, ks: jax.Array) -> jax.Array:
+    """Per-group pivot selection from the merged segmented summaries.
+
+    ``g_vals``/``g_wts`` are (G, S) concatenated per-shard samples,
+    ``slack`` the (G,) summed undercount bound, ``ks`` the (G, Q) target
+    ranks.  Same midpoint estimate as ``sketch.query_merged_sketch`` —
+    rank(v_t) lies in [cum_t, cum_t + slack_g] — with weight-0 lanes
+    (padding / empty segments) masked out of the argmin.  Returns the
+    (G, Q) pivots.
+    """
+
+    def per_group(v, w, sl, kvec):
+        order = jnp.argsort(v)
+        v, w = v[order], w[order]
+        est = jnp.cumsum(w) + sl // 2
+        big = jnp.int32(jnp.iinfo(jnp.int32).max)
+
+        def per_k(k):
+            err = jnp.where(w > 0, jnp.abs(est - k), big)
+            return v[jnp.argmin(err)]
+
+        return jax.vmap(per_k)(kvec)
+
+    return jax.vmap(per_group)(g_vals, g_wts, slack, ks)
+
+
+def grouped_target_ranks(n_g: jax.Array, qs: Sequence[float],
+                         ks=None) -> jax.Array:
+    """(G, Q) target ranks from the (G,) traced group counts.
+
+    ``ks`` overrides the q-derived ranks: a scalar (shared rank, the
+    channelwise case) or a (G,)/(G, Q) array of 1-based ranks for callers
+    that know their group counts host-side.
+    """
+    Q = len(qs)
+    if ks is not None:
+        ks = jnp.asarray(ks, jnp.int32)
+        if ks.ndim == 0:
+            return jnp.broadcast_to(ks, (n_g.shape[0], Q))
+        if ks.ndim == 1:
+            return jnp.broadcast_to(ks[:, None], (n_g.shape[0], Q))
+        return ks.reshape(n_g.shape[0], Q)
+    return jnp.stack([local_ops.target_rank_traced(n_g, q) for q in qs],
+                     axis=-1)
+
+
+# ---------------------------------------------------------------------------
+# sharded plan (shard_map body) + mesh entry point
+# ---------------------------------------------------------------------------
+
+
+def phase_grouped_sketch(v_local: jax.Array, k_local: jax.Array, *,
+                         axis: str, num_groups: int, s: int):
+    """Action 1, segmented: one (key, value) sort per shard, one all_gather
+    for all G summaries, one stacked psum for counts + slack."""
+    vals, wts, counts, mslack = segmented_sketch_local(v_local, k_local,
+                                                       num_groups, s)
+    g_vals = jnp.moveaxis(jax.lax.all_gather(vals, axis), 0, 1)
+    g_wts = jnp.moveaxis(jax.lax.all_gather(wts, axis), 0, 1)
+    G = num_groups
+    g_vals = g_vals.reshape(G, -1)                   # (G, P*s)
+    g_wts = g_wts.reshape(G, -1)
+    sums = jax.lax.psum(jnp.stack([counts, mslack]), axis)
+    return g_vals, g_wts, sums[0], sums[1]           # ..., n_g, slack
+
+
+def phase_grouped_count_extract(v_local: jax.Array, k_local: jax.Array,
+                                pivots: jax.Array, cap: int, *, axis: str,
+                                segmented_fn=None):
+    """Actions 2+3's per-shard work for all (G, Q) pivots.  ``segmented_fn``
+    (the Pallas kernel seam, signature ``(values, keys, pivots, cap) ->
+    (counts (G,Q,3), below (G,Q,cap), above (G,Q,cap))``) streams the shard
+    from HBM ONCE; the jnp fallback streams it 3*G*Q times."""
+    fn = segmented_fn or local_ops.grouped_count_extract
+    c_local, below, above = fn(v_local, k_local, pivots, cap)
+    return jax.lax.psum(c_local, axis), below, above
+
+
+def gk_select_grouped_sharded(v_local: jax.Array, k_local: jax.Array, *,
+                              qs: Sequence[float], num_groups: int,
+                              eps: float, axis: str, num_shards: int,
+                              reduce_strategy: str = "tree",
+                              segmented_fn=None, ks=None) -> jax.Array:
+    """Exact quantiles at every level in ``qs`` for ALL ``num_groups`` group
+    ids from ONE sharded job.  Returns the (G, Q) values, replicated.
+
+    The candidate cap is the engine-wide ``candidate_cap`` — the segmented
+    sketch's per-group pivot rank error is bounded by eps*n + 1 (see
+    ``grouped_sketch_samples``), so one static cap serves every group.
+    """
+    n_local = v_local.shape[0]
+    n = n_local * num_shards
+    G, Q = num_groups, len(qs)
+    s = grouped_sketch_samples(eps, n_local)
+
+    g_vals, g_wts, n_g, slack = phase_grouped_sketch(
+        v_local, k_local, axis=axis, num_groups=G, s=s)
+    kmat = grouped_target_ranks(n_g, qs, ks)
+    pivots = query_grouped_sketch(g_vals, g_wts, slack, kmat)
+
+    cap = local_ops.candidate_cap(n, eps, n_local)
+    counts, below, above = phase_grouped_count_extract(
+        v_local, k_local, pivots, cap, axis=axis, segmented_fn=segmented_fn)
+
+    below, above = engine.phase_reduce(
+        below.reshape(G * Q, -1), above.reshape(G * Q, -1), axis=axis,
+        num_shards=num_shards, strategy=reduce_strategy)
+    out = engine.phase_resolve(pivots.reshape(G * Q), kmat.reshape(G * Q),
+                               counts.reshape(G * Q, 3), below, above, cap)
+    return out.reshape(G, Q)
+
+
+def distributed_quantile_grouped(values: jax.Array, keys: jax.Array,
+                                 qs: Sequence[float], mesh: Mesh, *,
+                                 num_groups: int, axis: str = "data",
+                                 eps: float = 0.01,
+                                 reduce_strategy: str = "tree",
+                                 fused: bool = False, ks=None,
+                                 check_nans: bool = True) -> jax.Array:
+    """Exact per-group quantiles over a mesh: ``values`` and ``keys`` are
+    flat arrays sharded over ``axis``; returns the (num_groups, len(qs))
+    exact values, replicated.  ``fused=True`` injects the segmented Pallas
+    kernel — one HBM stream per shard for all G*Q pivots.  NaN policy:
+    reject; ``check_nans=False`` opts out (see ``distributed_quantile``)."""
+    num_shards = mesh.shape[axis]
+    qs = tuple(float(q) for q in qs)
+    if not qs:
+        raise ValueError("qs must name at least one quantile level")
+    if num_groups < 1:
+        raise ValueError(f"num_groups must be >= 1, got {num_groups}")
+    if values.ndim != 1 or keys.ndim != 1 or values.shape != keys.shape:
+        raise ValueError("values/keys must be equal-length flat arrays")
+    if values.size % num_shards:
+        raise ValueError(f"size {values.size} % shards {num_shards} != 0 — "
+                         f"pad first (use an out-of-range key for pads)")
+    if check_nans:
+        local_ops.reject_nans(values, "distributed_quantile_grouped")
+
+    segmented_fn = None
+    if fused:
+        from ..kernels.ops import make_segmented_fn   # lazy: kernels optional
+        segmented_fn = make_segmented_fn()
+
+    body = functools.partial(gk_select_grouped_sharded, qs=qs,
+                             num_groups=num_groups, eps=eps, axis=axis,
+                             num_shards=num_shards,
+                             reduce_strategy=reduce_strategy,
+                             segmented_fn=segmented_fn, ks=ks)
+    fn = engine.shard_map_compat(body, mesh=mesh,
+                                 in_specs=(P(axis), P(axis)), out_specs=P())
+    return fn(values, keys.astype(jnp.int32))
+
+
+# ---------------------------------------------------------------------------
+# single-process reference (chunks/pseudo-partitions play the shard role)
+# ---------------------------------------------------------------------------
+
+
+@functools.partial(jax.jit, static_argnames=("qs", "num_groups", "eps",
+                                             "block_select", "ks"))
+def _gk_select_grouped_jit(values: jax.Array, keys: jax.Array, qs: tuple,
+                           num_groups: int, eps: float, block_select: bool,
+                           ks) -> jax.Array:
+    P_, n_i = values.shape
+    n = P_ * n_i
+    G, Q = num_groups, len(qs)
+    s = grouped_sketch_samples(eps, n_i)
+
+    vals, wts, counts, mslack = jax.vmap(
+        lambda v, k: segmented_sketch_local(v, k, G, s))(values, keys)
+    g_vals = jnp.moveaxis(vals, 0, 1).reshape(G, -1)          # (G, P*s)
+    g_wts = jnp.moveaxis(wts, 0, 1).reshape(G, -1)
+    n_g = counts.sum(0)
+    slack = mslack.sum(0)
+    kmat = grouped_target_ranks(n_g, qs,
+                                None if ks is None else jnp.asarray(ks))
+    pivots = query_grouped_sketch(g_vals, g_wts, slack, kmat)
+
+    cap = local_ops.candidate_cap(n, eps, n_i)
+    if block_select:
+        from ..kernels import ops as kernel_ops   # lazy: kernels optional
+        c, b, a = jax.vmap(
+            lambda v, k: kernel_ops.segmented_count_extract(v, k, pivots,
+                                                            cap))(values, keys)
+    else:
+        c, b, a = jax.vmap(
+            lambda v, k: local_ops.grouped_count_extract(v, k, pivots,
+                                                         cap))(values, keys)
+    cnt = c.sum(0).reshape(G * Q, 3)                          # (G*Q, 3)
+    below = jnp.moveaxis(b, 0, 2).reshape(G * Q, P_ * cap)
+    above = jnp.moveaxis(a, 0, 2).reshape(G * Q, P_ * cap)
+    out = engine.phase_resolve(pivots.reshape(G * Q), kmat.reshape(G * Q),
+                               cnt, below, above, cap)
+    return out.reshape(G, Q)
+
+
+def gk_select_grouped(values: jax.Array, keys: jax.Array,
+                      qs: Sequence[float], *, num_groups: int,
+                      eps: float = 0.01, block_select: bool = False,
+                      ks=None) -> jax.Array:
+    """Single-process grouped GK Select: ``values``/``keys`` are (P, n_i)
+    arrays whose leading axis plays the shard role (exactly like
+    ``core.select.gk_select``).  Returns the (num_groups, len(qs)) exact
+    values.  ``block_select=True`` routes phase 3 through the segmented
+    Pallas kernel (one HBM stream per pseudo-shard).  ``ks`` (static
+    scalar or tuple) overrides the q-derived per-group ranks."""
+    if values.ndim != 2 or values.shape != keys.shape:
+        raise ValueError("values/keys must be matching (P, n_i) arrays")
+    local_ops.reject_nans(values, "gk_select_grouped")
+    if ks is not None and not isinstance(ks, int):
+        ks = tuple(int(k) for k in ks)
+    return _gk_select_grouped_jit(values, jnp.asarray(keys, jnp.int32),
+                                  tuple(float(q) for q in qs),
+                                  int(num_groups), float(eps),
+                                  bool(block_select), ks)

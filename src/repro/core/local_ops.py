@@ -42,6 +42,29 @@ def pad_with_high_sentinel(x: jax.Array, multiple: int, *,
     return x
 
 
+def reject_nans(x: jax.Array, where: str) -> None:
+    """NaN policy (DESIGN.md §7): REJECT.
+
+    GK Select's rank arithmetic assumes the 3-way counts partition n; a NaN
+    compares False against every pivot (neither lt, eq nor gt), so counts
+    silently stop summing to n and the resolved "quantile" is an arbitrary
+    element.  Rather than define quantiles over a non-total order, every
+    public *eager* entry point raises ``ValueError`` on float inputs
+    containing NaN.  Inside a jit trace the check is skipped (a traced value
+    cannot raise) — callers embedding the engine in larger jitted programs
+    own their NaN hygiene, and the contract is documented at each entry.
+    """
+    if isinstance(x, jax.core.Tracer):
+        return
+    x = jnp.asarray(x)
+    if not jnp.issubdtype(x.dtype, jnp.floating):
+        return
+    if bool(jnp.any(jnp.isnan(x))):
+        raise ValueError(
+            f"{where}: input contains NaN — quantiles are undefined over a "
+            f"non-total order (NaN policy: reject; see DESIGN.md §7)")
+
+
 def count3(x: jax.Array, pivot: jax.Array) -> jax.Array:
     """Dutch 3-way counts (lt, eq, gt) of one shard vs the pivot.
 
@@ -122,6 +145,103 @@ def target_rank(n: int, q: float) -> int:
     several ranks for n >~ 2^24, which would silently break exactness.
     """
     return int(min(n, max(1, math.ceil(q * n))))
+
+
+def exact_target_rank(n: int, q: float) -> int:
+    """Host-side EXACT-rational target rank: k = ceil(q*n) over the dyadic
+    rational q = a/2^t that the float ``q`` actually is, clamped to
+    [1, max(n, 1)].
+
+    ``target_rank`` rounds the product q*n to double before the ceil; this
+    variant never rounds, so it agrees bit-for-bit with the traced
+    ``target_rank_traced`` (the grouped engine's rank rule, where n is
+    data-dependent).  The two rules differ only when q*n lies within one
+    double ulp of an integer.
+    """
+    a, b = float(q).as_integer_ratio()
+    if not 0 < a <= b:
+        raise ValueError(f"q must be in (0, 1], got {q}")
+    return int(min(max(n, 1), max(1, -((-a * n) // b))))
+
+
+def target_rank_traced(n: jax.Array, q: float) -> jax.Array:
+    """``exact_target_rank`` for a TRACED int32 count ``n`` (static q).
+
+    The grouped engine needs per-group ranks k_g = ceil(q * n_g) where the
+    group counts n_g are data-dependent, so the ceil must run on device.
+    float32 is exact only below 2^24 ranks; instead the product a*n (a up to
+    2^54, n < 2^31) is computed in base-2^10 int32 limbs — every partial
+    product and carry stays far below 2^31 — then shifted down by t and
+    ceil'd exactly.  Elementwise over any ``n`` shape.  Empty groups
+    (n == 0) clamp to k = 1, which the resolve phase turns into the dtype's
+    high sentinel (no candidate ever satisfies rank 1 of nothing).
+    """
+    a, b = float(q).as_integer_ratio()
+    if not 0 < a <= b:
+        raise ValueError(f"q must be in (0, 1], got {q}")
+    t = b.bit_length() - 1                       # b == 2**t (q is a float)
+    n = jnp.asarray(n, jnp.int32)
+    n_limbs = [(n >> (10 * j)) & 1023 for j in range(4)]         # n < 2^31
+    a_limbs = [(a >> (10 * i)) & 1023
+               for i in range(max(1, -(-a.bit_length() // 10)))]
+    L = len(a_limbs) + 4
+    r = [jnp.zeros_like(n) for _ in range(L + 1)]
+    for i, ai in enumerate(a_limbs):             # D = a*n ...
+        if ai == 0:
+            continue
+        for j, nj in enumerate(n_limbs):
+            r[i + j] = r[i + j] + jnp.int32(ai) * nj
+    for m in range(L + 1):                       # ... + (2^t - 1)
+        cm = ((b - 1) >> (10 * m)) & 1023
+        if cm:
+            r[m] = r[m] + jnp.int32(cm)
+    for m in range(L):                           # carry-propagate
+        r[m + 1] = r[m + 1] + (r[m] >> 10)
+        r[m] = r[m] & 1023
+    mb, rb = divmod(t, 10)                       # k = floor(D / 2^t)
+    # D < 2^t * (n+1), so the quotient is < 2^31: every limb whose shifted
+    # contribution lands at bit >= 31 is provably zero and must be skipped
+    # (an int32 shift by >= 32 is implementation-defined in XLA), and a
+    # tiny q can push mb past the last limb entirely (quotient 0 -> k = 1).
+    k = (r[mb] >> rb) if mb <= L else jnp.zeros_like(n)
+    for m in range(mb + 1, L + 1):
+        shift = 10 * (m - mb) - rb
+        if shift >= 31:
+            break
+        k = k + (r[m] << shift)
+    return jnp.clip(k, 1, jnp.maximum(n, 1))
+
+
+def grouped_count_extract(values: jax.Array, keys: jax.Array,
+                          pivots: jax.Array, cap: int):
+    """Segmented speculative round, jnp reference: per-group 3-way counts
+    AND both capped candidate bands for every (group, level) pivot.
+
+    ``pivots`` is (G, Q); returns ``(counts (G, Q, 3), below (G, Q, cap),
+    above (G, Q, cap))`` with exactly the sentinel-padding semantics of
+    ``fused_count_extract`` restricted to ``keys == g``.  Keys outside
+    [0, G) belong to no group and are ignored.  This streams the shard
+    3*G*Q times; ``repro.kernels.ops.segmented_count_extract`` is the
+    bit-exact single-HBM-pass drop-in (DESIGN.md §7).
+    """
+    G, Q = pivots.shape
+    lo, hi = _sentinels(values.dtype)
+
+    def one(g, pivot):
+        in_g = keys == g
+        is_lt = in_g & (values < pivot)
+        is_gt = in_g & (values > pivot)
+        counts = jnp.stack([
+            jnp.sum(is_lt, dtype=jnp.int32),
+            jnp.sum(in_g & (values == pivot), dtype=jnp.int32),
+            jnp.sum(is_gt, dtype=jnp.int32)])
+        below = jax.lax.top_k(jnp.where(is_lt, values, lo), cap)[0]
+        above = -jax.lax.top_k(-jnp.where(is_gt, values, hi), cap)[0]
+        return counts, below, above
+
+    gids = jnp.repeat(jnp.arange(G, dtype=keys.dtype), Q)
+    c, b, a = jax.vmap(one)(gids, pivots.reshape(-1))
+    return (c.reshape(G, Q, 3), b.reshape(G, Q, cap), a.reshape(G, Q, cap))
 
 
 def resolve(pivot: jax.Array, k: jax.Array, lt: jax.Array, eq: jax.Array,

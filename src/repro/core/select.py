@@ -38,9 +38,9 @@ def _pivot_from_sample_sketch(parts: jax.Array, k: jax.Array, eps: float) -> jax
 
 @functools.partial(jax.jit, static_argnames=("q", "eps", "speculative",
                                              "block_select", "k"))
-def gk_select(parts: jax.Array, q: float, *, eps: float = 0.01,
-              speculative: bool = False, block_select: bool = False,
-              k: int = None) -> jax.Array:
+def _gk_select_jit(parts: jax.Array, q: float, *, eps: float = 0.01,
+                   speculative: bool = False, block_select: bool = False,
+                   k: int = None) -> jax.Array:
     """Exact q-quantile (k = ceil(q*n), 1-based) of a (P, n_i) partitioned array.
 
     Exactness does not depend on eps; eps only sizes the sketch and the
@@ -110,11 +110,29 @@ def gk_select(parts: jax.Array, q: float, *, eps: float = 0.01,
     return jnp.where((need_left <= 0) & (need_right <= 0), pivot, side_val)
 
 
-@functools.partial(jax.jit, static_argnames=("q", "eps", "num_partitions"))
+def gk_select(parts: jax.Array, q: float, *, eps: float = 0.01,
+              speculative: bool = False, block_select: bool = False,
+              k: int = None, check_nans: bool = True) -> jax.Array:
+    """Eager entry for ``_gk_select_jit`` (same signature and semantics).
+
+    NaN policy: reject (``local_ops.reject_nans``; DESIGN.md §7) — float
+    inputs containing NaN raise ``ValueError`` here; when ``parts`` is a
+    tracer (embedded in a caller's jit) the check is skipped and NaN-free
+    input is the caller's contract.  The check is one extra data pass + a
+    host sync; ``check_nans=False`` opts out for hot loops (mirroring the
+    sharded entries and ``QuantileService``).
+    """
+    if check_nans:
+        local_ops.reject_nans(parts, "gk_select")
+    return _gk_select_jit(parts, q, eps=eps, speculative=speculative,
+                          block_select=block_select, k=k)
+
+
 def exact_quantile(x: jax.Array, q: float, *, eps: float = 0.01,
                    num_partitions: int = 8) -> jax.Array:
     """Flat-array convenience wrapper: reshape into P pseudo-partitions and
-    run GK Select. x.size must be divisible by num_partitions (pad upstream)."""
+    run GK Select. x.size must be divisible by num_partitions (pad upstream).
+    NaN policy: reject (see ``gk_select``)."""
     n = x.size
     if n % num_partitions:
         raise ValueError(f"size {n} not divisible by P={num_partitions}")
@@ -122,14 +140,13 @@ def exact_quantile(x: jax.Array, q: float, *, eps: float = 0.01,
     return gk_select(parts, q, eps=eps)
 
 
-@functools.partial(jax.jit, static_argnames=("k", "eps", "num_partitions"))
 def exact_quantile_rank(x: jax.Array, k: int, *, eps: float = 0.01,
                         num_partitions: int = 8) -> jax.Array:
     """Rank-addressed ``exact_quantile``: the k-th smallest (1-based) element
     of the flat array.  Sentinel-padding callers (calibration) compute
     k = ceil(q * n_true) on the TRUE element count and pad with +inf, which
     never disturbs ranks <= n_true — unlike zero-padding, which inflates n
-    and shifts every quantile."""
+    and shifts every quantile.  NaN policy: reject (see ``gk_select``)."""
     n = x.size
     if n % num_partitions:
         raise ValueError(f"size {n} not divisible by P={num_partitions}")
@@ -141,9 +158,9 @@ def exact_quantile_rank(x: jax.Array, k: int, *, eps: float = 0.01,
 
 @functools.partial(jax.jit, static_argnames=("qs", "eps", "speculative",
                                              "block_select"))
-def gk_select_multi(parts: jax.Array, qs: tuple, *, eps: float = 0.01,
-                    speculative: bool = True,
-                    block_select: bool = False) -> jax.Array:
+def _gk_select_multi_jit(parts: jax.Array, qs: tuple, *, eps: float = 0.01,
+                         speculative: bool = True,
+                         block_select: bool = False) -> jax.Array:
     """Beyond-paper: Q quantiles in one job (qs is a static tuple of floats).
     The sketch phase is shared; the count/extract phases vmap over pivots
     (Spark would run Q separate jobs).
@@ -182,3 +199,15 @@ def gk_select_multi(parts: jax.Array, qs: tuple, *, eps: float = 0.01,
         return local_ops.resolve(pivot, k, counts[0], counts[1], below, above, cap)
 
     return jax.vmap(one)(pivots, ks)
+
+
+def gk_select_multi(parts: jax.Array, qs: tuple, *, eps: float = 0.01,
+                    speculative: bool = True, block_select: bool = False,
+                    check_nans: bool = True) -> jax.Array:
+    """Eager entry for ``_gk_select_multi_jit`` (same signature/semantics).
+    NaN policy: reject; ``check_nans=False`` opts out (see ``gk_select``)."""
+    if check_nans:
+        local_ops.reject_nans(parts, "gk_select_multi")
+    return _gk_select_multi_jit(parts, tuple(qs), eps=eps,
+                                speculative=speculative,
+                                block_select=block_select)

@@ -6,6 +6,9 @@ fused_select    — single-pass fused band extraction: counts + both capped
                   candidate buffers in ONE HBM stream (multi-pivot variant
                   included), plus the 256-bin byte histogram behind the
                   4-pass radix select
+segmented_select — the grouped engine's kernel: counts + candidate buffers
+                  for every (group, level) pivot, keyed by a per-element
+                  group id, in ONE HBM stream (3*G*Q passes -> 1)
 ops             — dispatch wrappers, HBM-pass counter, sortable-uint
                   transform, radix_select_kth, injection hooks
 ref             — pure-jnp oracles the kernel tests compare against
@@ -14,6 +17,8 @@ from . import ops, ref
 from .partition_count import partition_count, LANES
 from .band_count import band_count
 from .fused_select import fused_select, fused_select_multi, byte_histogram
+from .segmented_select import segmented_select
 
 __all__ = ["ops", "ref", "partition_count", "band_count", "fused_select",
-           "fused_select_multi", "byte_histogram", "LANES"]
+           "fused_select_multi", "byte_histogram", "segmented_select",
+           "LANES"]

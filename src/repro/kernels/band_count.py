@@ -26,7 +26,7 @@ def _band_count_kernel(bounds_ref, x_ref, out_ref, *, n_valid: int,
 
     @pl.when(step == 0)
     def _init():
-        out_ref[0] = 0
+        out_ref[0] = jnp.int32(0)
 
     x = x_ref[...]
     lo = bounds_ref[0]

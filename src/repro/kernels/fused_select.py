@@ -85,9 +85,9 @@ def _fused_kernel(pivot_ref, x_ref, count_ref, below_ref, above_ref, *,
 
     @pl.when(step == 0)
     def _init():
-        count_ref[0] = 0
-        count_ref[1] = 0
-        count_ref[2] = 0
+        count_ref[0] = jnp.int32(0)
+        count_ref[1] = jnp.int32(0)
+        count_ref[2] = jnp.int32(0)
         below_ref[...] = jnp.full((1, cap_pad), lo, below_ref.dtype)
         above_ref[...] = jnp.full((1, cap_pad), hi, above_ref.dtype)
 
@@ -173,9 +173,9 @@ def _fused_multi_kernel(pivots_ref, x_ref, count_ref, below_ref, above_ref, *,
     @pl.when(step == 0)
     def _init():
         for qi in range(num_pivots):
-            count_ref[qi, 0] = 0
-            count_ref[qi, 1] = 0
-            count_ref[qi, 2] = 0
+            count_ref[qi, 0] = jnp.int32(0)
+            count_ref[qi, 1] = jnp.int32(0)
+            count_ref[qi, 2] = jnp.int32(0)
         below_ref[...] = jnp.full((num_pivots, cap_pad), lo, below_ref.dtype)
         above_ref[...] = jnp.full((num_pivots, cap_pad), hi, above_ref.dtype)
 

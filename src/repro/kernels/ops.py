@@ -37,6 +37,7 @@ from .partition_count import LANES, partition_count
 from .band_count import band_count as _band_count_kernel
 from .fused_select import (fused_select, fused_select_multi,
                            byte_histogram as _byte_histogram_kernel)
+from .segmented_select import segmented_select
 
 
 def _interpret() -> bool:
@@ -158,6 +159,28 @@ def fused_count_extract_multi(x: jax.Array, pivots: jax.Array, cap: int, *,
         x2d, jnp.asarray(pivots, x.dtype), n_valid=x.size,
         cap_pad=_cap_pad(cap), interpret=_interpret())
     return counts, below[:, :cap], above[:, :cap]
+
+
+def segmented_count_extract(values: jax.Array, keys: jax.Array,
+                            pivots: jax.Array, cap: int, *,
+                            use_pallas: bool = True):
+    """The grouped engine's phase 3 in ONE streaming pass: per-group counts
+    plus both capped candidate bands for every (group, level) pivot —
+    ``(counts (G, Q, 3), below (G, Q, cap), above (G, Q, cap))`` with the
+    exact semantics of ``local_ops.grouped_count_extract``.  The unfused
+    pipeline costs 3 passes per (group, level); this costs one total."""
+    G, Q = pivots.shape
+    if not use_pallas:
+        _tick(3 * G * Q)   # oracle: 3 streams per (group, level)
+        return ref.segmented_select_ref(values.ravel(), keys.ravel(),
+                                        pivots, cap)
+    _tick()
+    x2d = pad_to_tiles(values)
+    k2d = pad_to_tiles(keys.astype(jnp.int32))
+    counts, below, above = segmented_select(
+        x2d, k2d, jnp.asarray(pivots, values.dtype), n_valid=values.size,
+        cap_pad=_cap_pad(cap), num_groups=G, interpret=_interpret())
+    return counts, below[:, :, :cap], above[:, :, :cap]
 
 
 # ---------------------------------------------------------------------------
@@ -309,6 +332,17 @@ def make_fused_fn(use_pallas: bool = True):
     count+extract round becomes one HBM stream per shard."""
     def fn(x, pivot, cap):
         return fused_count_extract(x, pivot, cap, use_pallas=use_pallas)
+    return fn
+
+
+def make_segmented_fn(use_pallas: bool = True):
+    """segmented_fn injection hook for ``gk_select_grouped_sharded``: the
+    whole (G, Q)-pivot grouped count+extract phase becomes ONE HBM stream
+    per shard (``(values, keys, pivots, cap) -> (counts (G,Q,3),
+    below (G,Q,cap), above (G,Q,cap))``)."""
+    def fn(values, keys, pivots, cap):
+        return segmented_count_extract(values, keys, pivots, cap,
+                                       use_pallas=use_pallas)
     return fn
 
 

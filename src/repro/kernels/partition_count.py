@@ -31,9 +31,9 @@ def _count3_kernel(pivot_ref, x_ref, out_ref, *, n_valid: int,
 
     @pl.when(step == 0)
     def _init():
-        out_ref[0] = 0
-        out_ref[1] = 0
-        out_ref[2] = 0
+        out_ref[0] = jnp.int32(0)
+        out_ref[1] = jnp.int32(0)
+        out_ref[2] = jnp.int32(0)
 
     x = x_ref[...]
     pivot = pivot_ref[0]

@@ -10,6 +10,14 @@ import jax
 import jax.numpy as jnp
 
 
+def _sentinels(dtype):
+    """(lowest, highest) padding sentinels (same semantics as the kernels)."""
+    if jnp.issubdtype(dtype, jnp.floating):
+        return jnp.array(-jnp.inf, dtype), jnp.array(jnp.inf, dtype)
+    info = jnp.iinfo(dtype)
+    return jnp.array(info.min, dtype), jnp.array(info.max, dtype)
+
+
 def partition_count_ref(x: jax.Array, pivot: jax.Array) -> jax.Array:
     """(lt, eq, gt) counts of a flat array vs pivot — paper ``firstPass``."""
     lt = jnp.sum(x < pivot, dtype=jnp.int32)
@@ -33,6 +41,32 @@ def fused_select_ref(x: jax.Array, pivot: jax.Array, cap: int):
     return counts, below, above
 
 
+def segmented_select_ref(values: jax.Array, keys: jax.Array,
+                         pivots: jax.Array, cap: int):
+    """Oracle for the single-pass segmented band extraction
+    (``segmented_select.segmented_select``): per-group (lt, eq, gt) counts
+    plus both capped candidate buffers for every (group, level) pivot, as
+    3 whole-array passes per pair.  ``pivots`` is (G, Q)."""
+    G, Q = pivots.shape
+    lo, hi = _sentinels(values.dtype)
+
+    def one(g, pivot):
+        in_g = keys == g
+        is_lt = in_g & (values < pivot)
+        is_gt = in_g & (values > pivot)
+        counts = jnp.stack([
+            jnp.sum(is_lt, dtype=jnp.int32),
+            jnp.sum(in_g & (values == pivot), dtype=jnp.int32),
+            jnp.sum(is_gt, dtype=jnp.int32)])
+        below = jax.lax.top_k(jnp.where(is_lt, values, lo), cap)[0]
+        above = -jax.lax.top_k(-jnp.where(is_gt, values, hi), cap)[0]
+        return counts, below, above
+
+    gids = jnp.repeat(jnp.arange(G, dtype=keys.dtype), Q)
+    c, b, a = jax.vmap(one)(gids, pivots.reshape(-1))
+    return (c.reshape(G, Q, 3), b.reshape(G, Q, cap), a.reshape(G, Q, cap))
+
+
 def byte_histogram_ref(u: jax.Array, prefix: jax.Array, mask: jax.Array,
                        shift: int) -> jax.Array:
     """(256,) histogram of byte ``(u >> shift) & 0xFF`` over the uint32
@@ -54,12 +88,7 @@ def block_topk_ref(x: jax.Array, pivot: jax.Array, cap: int,
     largest_below=False: the ``cap`` smallest values strictly above the pivot,
                          ascending, padded with the dtype's highest sentinel.
     """
-    if jnp.issubdtype(x.dtype, jnp.floating):
-        lo = jnp.array(-jnp.inf, x.dtype)
-        hi = jnp.array(jnp.inf, x.dtype)
-    else:
-        info = jnp.iinfo(x.dtype)
-        lo, hi = jnp.array(info.min, x.dtype), jnp.array(info.max, x.dtype)
+    lo, hi = _sentinels(x.dtype)
     if largest_below:
         keys = jnp.where(x < pivot, x, lo)
         vals, _ = jax.lax.top_k(keys, cap)

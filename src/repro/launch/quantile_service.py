@@ -29,15 +29,23 @@ bit-identical to a full sort).
 This is the single-process face of the engine (chunks play the role of
 shards, exactly like ``core.select``); the sharded warm path is
 ``distributed_quantile_multi(..., pivots=..., cap=...)``.
+
+Grouped streams (DESIGN.md §7): ``ingest_grouped(name, values, keys)``
+buffers keyed batches and ``grouped(name, qs, num_groups)`` answers the
+whole (group, level) matrix exactly in ONE job — one fused HBM pass per
+chunk with ``fused=True``.  NaN policy: reject at ingest, so queries never
+see a NaN.
 """
 from __future__ import annotations
 
 import dataclasses
 import functools
+import math
 from typing import Dict, List, Optional
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.core import local_ops
 from repro.core.sketch import (SketchState, record_sketch_sort, sketch_budget,
@@ -76,6 +84,30 @@ def _chunk_fn(cap: int, fused: bool):
 
 
 @functools.lru_cache(maxsize=None)
+def _grouped_sketch_fn(num_groups: int, s: int):
+    """Per-chunk segmented sketch (one (key, value) sort of the chunk)."""
+    from repro.core.grouped import segmented_sketch_local
+    return jax.jit(lambda v, k: segmented_sketch_local(v, k, num_groups, s))
+
+
+@functools.lru_cache(maxsize=None)
+def _grouped_chunk_fn(cap: int, fused: bool):
+    """Per-chunk segmented count+extract for all (G, Q) pivots: the grouped
+    query's only data pass — ONE HBM stream per chunk with the segmented
+    Pallas kernel (fused=True), 3*G*Q jnp streams otherwise."""
+    if fused:
+        from repro.kernels import ops as kernel_ops
+
+        def fn(v, k, pivots):
+            return kernel_ops.segmented_count_extract(v, k, pivots, cap)
+        return fn   # kernel wrapper dispatches (and ticks) itself
+
+    def fn(v, k, pivots):
+        return local_ops.grouped_count_extract(v, k, pivots, cap)
+    return jax.jit(fn)
+
+
+@functools.lru_cache(maxsize=None)
 def _resolve_fn(cap: int):
     def fn(pivot, k, counts, belows, aboves):
         lt = sum(c[0] for c in counts)
@@ -94,6 +126,13 @@ class _Stream:
     n: int
 
 
+@dataclasses.dataclass
+class _GroupedStream:
+    chunks: List[jax.Array]        # values, flat per ingest batch
+    key_chunks: List[jax.Array]    # int32 group ids, aligned with chunks
+    n: int
+
+
 class QuantileService:
     """Owns a live ``SketchState`` + buffered chunks per named stream.
 
@@ -103,14 +142,22 @@ class QuantileService:
     """
 
     def __init__(self, *, eps: float = 0.01, budget: Optional[int] = None,
-                 dtype=jnp.float32, fused: bool = False):
+                 dtype=jnp.float32, fused: bool = False,
+                 check_nans: bool = True):
+        """``check_nans=False`` opts out of the reject-at-ingest NaN check:
+        the check is a blocking device->host sync per batch, which a tight
+        decode loop (one ingest per token) may not afford.  Opting out
+        transfers the NaN-free contract to the caller — queries over a
+        NaN-poisoned stream are undefined (DESIGN.md §7)."""
         if not 0.0 < eps < 1.0:
             raise ValueError(f"eps must be in (0,1), got {eps}")
         self.eps = eps
         self.budget = int(budget) if budget else sketch_budget(eps)
         self.dtype = jnp.dtype(dtype)
         self.fused = fused
+        self.check_nans = check_nans
         self._streams: Dict[str, _Stream] = {}
+        self._grouped: Dict[str, _GroupedStream] = {}
 
     # -- stream lifecycle ---------------------------------------------------
 
@@ -125,9 +172,14 @@ class QuantileService:
 
     def drop_stream(self, name: str) -> None:
         self._streams.pop(name, None)
+        self._grouped.pop(name, None)
 
     def stream_count(self, name: str) -> int:
         return self.stream(name).n
+
+    def grouped_stream_count(self, name: str) -> int:
+        st = self._grouped.get(name)
+        return st.n if st else 0
 
     def rank_bound(self, name: str) -> int:
         """The live sketch's tracked worst-case query rank error."""
@@ -138,15 +190,40 @@ class QuantileService:
     def ingest(self, name: str, batch) -> None:
         """Fold one batch into the stream: buffer the raw values and advance
         the resident sketch (ONE sort, of the batch only — the per-query
-        sketch sort this state exists to delete)."""
+        sketch sort this state exists to delete).
+
+        NaN policy: reject (DESIGN.md §7).  Validating once at ingest means
+        ``exact``/``approx`` never see a NaN, so queries stay check-free.
+        """
         st = self.stream(name)
         batch = jnp.asarray(batch).reshape(-1).astype(self.dtype)
+        if self.check_nans:
+            local_ops.reject_nans(batch, "QuantileService.ingest")
         if batch.size == 0:
             return
         st.chunks.append(batch)
         st.n += int(batch.size)
         record_sketch_sort()            # sketch_update sorts the batch
         st.state = _update_jit(st.state, batch)
+
+    def ingest_grouped(self, name: str, values, keys) -> None:
+        """Buffer one (values, keys) batch for per-group queries.  Keys are
+        int32 group ids; out-of-range ids belong to no group (the engine
+        ignores them — use them to mark pad/invalid lanes).  NaN policy:
+        reject at ingest, like ``ingest``."""
+        values = jnp.asarray(values).reshape(-1).astype(self.dtype)
+        keys = jnp.asarray(keys).reshape(-1).astype(jnp.int32)
+        if values.shape != keys.shape:
+            raise ValueError(f"values/keys length mismatch: "
+                             f"{values.shape} vs {keys.shape}")
+        if self.check_nans:
+            local_ops.reject_nans(values, "QuantileService.ingest_grouped")
+        if values.size == 0:
+            return
+        st = self._grouped.setdefault(name, _GroupedStream([], [], 0))
+        st.chunks.append(values)
+        st.key_chunks.append(keys)
+        st.n += int(values.size)
 
     # -- queries ------------------------------------------------------------
 
@@ -183,7 +260,86 @@ class QuantileService:
         cap = min(st.n, _round_up(bound + 2, 128))
         return self._count_extract_resolve(st, k, pivot, cap)
 
+    def grouped(self, name: str, qs, num_groups: int):
+        """EXACT quantiles at every level in ``qs`` for ALL ``num_groups``
+        group ids over everything ``ingest_grouped`` buffered — ONE job for
+        the whole (G, Q) matrix instead of G*Q, with chunks playing the
+        shard role (DESIGN.md §7).  Per-group target ranks follow the
+        grouped engine's exact-rational rule (``local_ops.exact_target_rank``
+        — group counts are data, so ranks must be computable on device and
+        host bit-identically).  Empty groups yield the dtype's high
+        sentinel.  Returns the (num_groups, len(qs)) values.
+
+        This is a COLD query: per-group sketches are rebuilt from the
+        buffered chunks each time (one (key, value) sort per chunk, ticked
+        on the sketch-sort counter).  A per-group resident ``SketchState``
+        dict is the warm-path extension; the count+extract side is already
+        minimal — one fused HBM pass per chunk with ``fused=True``.
+        """
+        from repro.core.grouped import (grouped_sketch_samples,
+                                        query_grouped_sketch)
+        st = self._grouped.get(name)
+        if st is None or st.n == 0:
+            raise ValueError(f"grouped stream {name!r} is empty")
+        qs = tuple(float(q) for q in qs)
+        G, Q = int(num_groups), len(qs)
+        if G < 1 or Q < 1:
+            raise ValueError("need num_groups >= 1 and at least one level")
+
+        # ---- action 1: per-chunk segmented sketches, merged -------------
+        vals_l, wts_l = [], []
+        n_g = jnp.zeros((G,), jnp.int32)
+        slack = jnp.zeros((G,), jnp.int32)
+        for v, k in zip(st.chunks, st.key_chunks):
+            s = grouped_sketch_samples(self.eps, v.shape[0])
+            record_sketch_sort()        # segmented sketch sorts the chunk
+            va, wa, ca, sa = _grouped_sketch_fn(G, s)(v, k)
+            vals_l.append(va)
+            wts_l.append(wa)
+            n_g = n_g + ca
+            slack = slack + sa
+        g_vals = jnp.concatenate(vals_l, axis=1)
+        g_wts = jnp.concatenate(wts_l, axis=1)
+        counts_host = np.asarray(jax.device_get(n_g)).tolist()
+        kmat = jnp.asarray(
+            [[local_ops.exact_target_rank(c, q) for q in qs]
+             for c in counts_host], jnp.int32)
+        pivots = query_grouped_sketch(g_vals, g_wts, slack, kmat)
+
+        cap = min(st.n, _round_up(math.ceil(self.eps * st.n) + 2, 128))
+        return self._grouped_resolve(st, kmat, pivots, cap, G, Q)
+
     # -- internals ----------------------------------------------------------
+
+    def _grouped_resolve(self, st: _GroupedStream, kmat, pivots, cap: int,
+                         G: int, Q: int):
+        """Actions 2+3 of the grouped job over the buffered chunks, with the
+        same widen-and-retry guard as ``_count_extract_resolve`` so
+        exactness never hinges on the sketch bound."""
+        counts = jnp.zeros((G, Q, 3), jnp.int32)
+        belows, aboves = [], []
+        for v, k in zip(st.chunks, st.key_chunks):
+            cap_c = min(v.shape[0], cap)
+            c, b, a = _grouped_chunk_fn(cap_c, self.fused)(v, k, pivots)
+            counts = counts + c
+            belows.append(b)
+            aboves.append(a)
+        below = jnp.concatenate(belows, axis=-1).reshape(G * Q, -1)
+        above = jnp.concatenate(aboves, axis=-1).reshape(G * Q, -1)
+        flat_c = counts.reshape(G * Q, 3)
+
+        def one(pivot, kk, c, b, a):
+            return local_ops.resolve(pivot, kk, c[0], c[1], b, a, cap)
+
+        out = jax.vmap(one)(pivots.reshape(G * Q), kmat.reshape(G * Q),
+                            flat_c, below, above)
+        lt, eq = flat_c[:, 0], flat_c[:, 1]
+        kf = kmat.reshape(G * Q)
+        need = int(jnp.max(jnp.maximum(lt - kf + 1, kf - (lt + eq))))
+        if need > cap:     # sketch bound violated — widen and rerun
+            return self._grouped_resolve(
+                st, kmat, pivots, min(st.n, _round_up(need + 2, 128)), G, Q)
+        return out.reshape(G, Q)
 
     def _cold_pivot(self, st: _Stream, k: int):
         """The stateless job's action 1: re-sketch every buffered chunk from

@@ -192,31 +192,67 @@ def pytree_radix_quantile(tree, q: float, *, passes: int = 32,
     return from_sortable_u32(prefix, jnp.float32)
 
 
-@functools.partial(jax.jit, static_argnames=("q", "axis", "eps",
-                                             "num_partitions"))
-def channelwise_exact_quantile(x: jax.Array, q: float, *, axis: int = -1,
+def _grouped_channel_job(values: jax.Array, keys: jax.Array, num_channels: int,
+                         q: float, eps: float, num_partitions: int,
+                         ks) -> jax.Array:
+    """Flat (values, channel-id) pair -> (C,) exact per-channel quantiles as
+    ONE grouped GK Select job.  The tail pad carries the out-of-range key
+    ``num_channels`` so pads belong to no group and never move any rank."""
+    from repro.core.grouped import gk_select_grouped
+
+    pad = (-values.size) % num_partitions
+    if pad:
+        values = local_ops.pad_with_high_sentinel(values, num_partitions)
+        keys = jnp.concatenate(
+            [keys, jnp.full((pad,), num_channels, jnp.int32)])
+    parts_v = values.reshape(num_partitions, -1)
+    parts_k = keys.reshape(num_partitions, -1)
+    return gk_select_grouped(parts_v, parts_k, (q,),
+                             num_groups=num_channels, eps=eps, ks=ks)[:, 0]
+
+
+def channelwise_exact_quantile(x, q: float, *, axis: int = -1,
                                eps: float = 0.01,
                                num_partitions: int = 8) -> jax.Array:
-    """Per-channel exact q-quantile over every axis except ``axis``, batched
-    into ONE compiled multi-quantile job.
+    """Per-channel exact q-quantile, batched into ONE grouped GK Select job.
 
-    All channels share one static target rank (same per-channel count), so
-    the whole batch is a single vmapped GK Select — one dispatch, one fused
-    trace — instead of C separate ``exact_quantile`` calls/jobs (the Spark
-    one-job-per-quantile regression the paper's shared-sketch design
-    removes).  Channel rows that do not divide ``num_partitions`` are padded
-    with the dtype's high sentinel, which never moves ranks <= n_true
-    (``local_ops.pad_with_high_sentinel``); the rank is taken on the TRUE
-    per-channel count.  Returns the (C,) exact values.
+    ``x`` is either a dense array (channels along ``axis``, quantile taken
+    over every other axis) or a SEQUENCE of 1-D arrays — ragged channels
+    with different element counts (per-tensor calibration streams, variable
+    sequence lengths).  Either way the whole batch is one segmented job
+    (``core.grouped.gk_select_grouped``, channel id == group key): one
+    sketch phase, one count+extract phase, one resolve — instead of C
+    separate ``exact_quantile`` jobs (the Spark one-job-per-quantile
+    regression the paper's shared-sketch design removes).
+
+    Per-channel counts are host-known here, so target ranks use the
+    engine-wide float rule ``local_ops.target_rank`` on the TRUE per-channel
+    count (pads carry an out-of-range group key and never shift a rank).
+    Empty ragged channels yield the dtype's high sentinel.  NaN policy:
+    reject (DESIGN.md §7).  Returns the (C,) exact values.
     """
-    from repro.core.select import gk_select
+    # NaN policy rides the single reject_nans inside gk_select_grouped —
+    # no extra scan here (the check is a full data pass + host sync).
+    if isinstance(x, (list, tuple)):
+        channels = [jnp.asarray(c).reshape(-1) for c in x]
+        if not channels:
+            raise ValueError("need at least one channel")
+        dt = jnp.result_type(*channels)
+        lens = [int(c.size) for c in channels]
+        values = jnp.concatenate([c.astype(dt) for c in channels])
+        keys = jnp.concatenate(
+            [jnp.full((l,), i, jnp.int32) for i, l in enumerate(lens)])
+        ks = tuple(local_ops.target_rank(l, q) if l else 1 for l in lens)
+        return _grouped_channel_job(values, keys, len(channels), q, eps,
+                                    num_partitions, ks)
 
     C = x.shape[axis]
     xc = jnp.moveaxis(x, axis, 0).reshape(C, -1)
-    k = local_ops.target_rank(xc.shape[1], q)
-    xc = local_ops.pad_with_high_sentinel(xc, num_partitions, axis=1)
-    parts = xc.reshape(C, num_partitions, -1)
-    return jax.vmap(lambda p: gk_select(p, None, k=k, eps=eps))(parts)
+    n = xc.shape[1]
+    keys = jnp.repeat(jnp.arange(C, dtype=jnp.int32), n)
+    return _grouped_channel_job(xc.reshape(-1), keys, C, q, eps,
+                                num_partitions,
+                                local_ops.target_rank(n, q))
 
 
 @functools.partial(jax.jit, static_argnames=("q", "eps", "method"))

@@ -1,52 +1,97 @@
-"""Optional-hypothesis shim: property tests degrade to explicit skips when
-``hypothesis`` is not installed, so the tier-1 suite always collects and the
-example-based tests still run.
+"""Optional-hypothesis shim.
+
+With ``hypothesis`` installed (the ``test`` extra in pyproject.toml; CI
+installs it), ``given``/``settings``/``st`` ARE hypothesis's own — the
+property tests run with full shrinking/coverage.
+
+Without it the property tests still EXECUTE (they used to degrade to
+skips, which silently dropped the streaming/sketch invariant tests from
+tier-1): ``@given`` replays each property over a deterministic pseudo-
+random sample of the strategy space, seeded from the test's qualified name
+so failures reproduce exactly.  Only the strategy constructors these suites
+use are implemented (``st.integers``/``st.floats``); the example count is
+capped at ``REPRO_PROPERTY_EXAMPLES`` (default 5) to keep tier-1 fast —
+the full declared ``max_examples`` run belongs to real hypothesis in CI.
 
 Usage (in test modules)::
 
     from _hypothesis_compat import given, settings, st
-
-With hypothesis installed these ARE hypothesis's own ``given``/``settings``/
-``strategies``; without it, ``@given(...)`` replaces the test body with a
-``pytest.skip`` stub and ``st.*``/``settings`` become inert placeholders.
 """
 try:
     from hypothesis import given, settings, strategies as st
     HAVE_HYPOTHESIS = True
 except ImportError:
-    import pytest
+    import inspect
+    import os
+    import random
+    import zlib
 
     HAVE_HYPOTHESIS = False
 
-    class _AnyStrategy:
-        """Accepts any strategy constructor call and returns a dummy."""
+    _EXAMPLE_CAP = max(1, int(os.environ.get("REPRO_PROPERTY_EXAMPLES", "5")))
+
+    class _Strategy:
+        def __init__(self, draw):
+            self._draw = draw
+
+        def draw(self, rng):
+            return self._draw(rng)
+
+    class _St:
+        """The strategy constructors the property suites use, as uniform
+        deterministic samplers.  Anything else raises loudly instead of
+        silently passing vacuous tests."""
+
+        @staticmethod
+        def integers(min_value, max_value):
+            return _Strategy(lambda rng: rng.randint(min_value, max_value))
+
+        @staticmethod
+        def floats(min_value, max_value):
+            return _Strategy(lambda rng: rng.uniform(min_value, max_value))
 
         def __getattr__(self, name):
-            def strategy(*args, **kwargs):
-                return None
-            return strategy
+            raise NotImplementedError(
+                f"fallback strategy st.{name} not implemented — add it to "
+                f"tests/_hypothesis_compat.py or install hypothesis")
 
-    st = _AnyStrategy()
+    st = _St()
 
-    def settings(*args, **kwargs):
+    def settings(max_examples=None, **_kwargs):
         def deco(fn):
+            if max_examples:
+                fn._declared_examples = max_examples
             return fn
         return deco
 
-    def given(*args, **kwargs):
+    def given(*strats, **kwargs):
+        if kwargs:
+            raise NotImplementedError(
+                "fallback @given supports positional strategies only")
+
         def deco(fn):
-            # Plain (self)/() signature so pytest doesn't try to resolve the
-            # property parameters as fixtures.  No functools.wraps: that
-            # would re-expose the original signature via __wrapped__.
-            import inspect
             params = list(inspect.signature(fn).parameters)
-            if params and params[0] == "self":
-                def skipper(self):
-                    pytest.skip("hypothesis not installed")
+            has_self = bool(params) and params[0] == "self"
+
+            def _execute(args):
+                # @settings sits ABOVE @given, so it annotates the wrapper;
+                # read the declared count at call time, then cap it.
+                declared = getattr(wrapper, "_declared_examples",
+                                   None) or _EXAMPLE_CAP
+                rng = random.Random(
+                    zlib.crc32(fn.__qualname__.encode("utf-8")))
+                for _ in range(min(declared, _EXAMPLE_CAP)):
+                    fn(*args, *(s.draw(rng) for s in strats))
+
+            # Plain (self)/() signature so pytest doesn't try to resolve the
+            # property parameters as fixtures.
+            if has_self:
+                def wrapper(self):
+                    _execute((self,))
             else:
-                def skipper():
-                    pytest.skip("hypothesis not installed")
-            skipper.__name__ = getattr(fn, "__name__", "property_test")
-            skipper.__doc__ = fn.__doc__
-            return skipper
+                def wrapper():
+                    _execute(())
+            wrapper.__name__ = getattr(fn, "__name__", "property_test")
+            wrapper.__doc__ = fn.__doc__
+            return wrapper
         return deco

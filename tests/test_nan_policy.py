@@ -1,0 +1,163 @@
+"""NaN policy: REJECT (DESIGN.md §7).
+
+A NaN compares False against every pivot, so the 3-way counts silently stop
+partitioning n and the resolved "quantile" is an arbitrary element.  Every
+public *eager* entry point must therefore raise ``ValueError`` on float
+inputs containing NaN — local, sharded, grouped and service paths alike —
+while NaN-free inputs are untouched and integer inputs skip the check.
+Inside a jit trace the check is skipped by contract (a traced value cannot
+raise) — also pinned here so the skip stays deliberate.
+"""
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.core import (exact_quantile, exact_quantile_rank, gk_select,
+                        gk_select_multi, gk_select_grouped,
+                        distributed_quantile, distributed_quantile_multi,
+                        distributed_quantile_grouped)
+from repro.core.local_ops import reject_nans
+from repro.launch import QuantileService, StreamingCalibrator
+from repro.launch.mesh import make_mesh
+from repro.optim.quantile_ops import channelwise_exact_quantile
+
+
+def _with_nan(n=256, seed=0, dtype=np.float32):
+    rng = np.random.default_rng(seed)
+    x = rng.normal(size=n).astype(dtype)
+    x[n // 3] = np.nan
+    return jnp.asarray(x)
+
+
+class TestLocalEngines:
+    def test_gk_select_rejects(self):
+        with pytest.raises(ValueError, match="NaN"):
+            gk_select(_with_nan().reshape(4, 64), 0.5)
+
+    def test_gk_select_multi_rejects(self):
+        with pytest.raises(ValueError, match="NaN"):
+            gk_select_multi(_with_nan().reshape(4, 64), (0.25, 0.75))
+
+    def test_exact_quantile_paths_reject(self):
+        with pytest.raises(ValueError, match="NaN"):
+            exact_quantile(_with_nan(), 0.5)
+        with pytest.raises(ValueError, match="NaN"):
+            exact_quantile_rank(_with_nan(), 10)
+
+    def test_grouped_rejects(self):
+        keys = jnp.zeros((4, 64), jnp.int32)
+        with pytest.raises(ValueError, match="NaN"):
+            gk_select_grouped(_with_nan().reshape(4, 64), keys, (0.5,),
+                              num_groups=1)
+
+    def test_channelwise_rejects_dense_and_ragged(self):
+        with pytest.raises(ValueError, match="NaN"):
+            channelwise_exact_quantile(_with_nan().reshape(4, 64), 0.9,
+                                       axis=0)
+        with pytest.raises(ValueError, match="NaN"):
+            channelwise_exact_quantile([jnp.ones((8,)), _with_nan(16)], 0.9)
+
+    def test_bfloat16_nan_rejects(self):
+        x = jnp.asarray(np.r_[np.ones(63, np.float32), np.nan]
+                        ).astype(jnp.bfloat16)
+        with pytest.raises(ValueError, match="NaN"):
+            gk_select(x.reshape(4, 16), 0.5)
+
+    def test_clean_and_integer_inputs_unaffected(self):
+        rng = np.random.default_rng(1)
+        x = rng.normal(size=256).astype(np.float32)
+        assert float(exact_quantile(jnp.asarray(x), 0.5)) == \
+            np.sort(x)[127]
+        xi = jnp.asarray(rng.integers(-50, 50, size=256, dtype=np.int32))
+        int(exact_quantile(xi, 0.5))   # int dtype: check skipped, no raise
+
+    def test_inf_is_not_nan(self):
+        """+-inf totally orders fine; only NaN is rejected."""
+        x = np.linspace(-1, 1, 256).astype(np.float32)
+        x[0], x[-1] = -np.inf, np.inf
+        float(exact_quantile(jnp.asarray(x), 0.5))
+
+
+class TestShardedEngines:
+    def test_distributed_quantile_rejects(self):
+        mesh = make_mesh((1,), ("data",))
+        with pytest.raises(ValueError, match="NaN"):
+            distributed_quantile(_with_nan(), 0.5, mesh)
+
+    def test_distributed_quantile_multi_rejects(self):
+        mesh = make_mesh((1,), ("data",))
+        with pytest.raises(ValueError, match="NaN"):
+            distributed_quantile_multi(_with_nan(), (0.5, 0.9), mesh)
+
+    def test_distributed_quantile_grouped_rejects(self):
+        mesh = make_mesh((1,), ("data",))
+        keys = jnp.zeros((256,), jnp.int32)
+        with pytest.raises(ValueError, match="NaN"):
+            distributed_quantile_grouped(_with_nan(), keys, (0.5,), mesh,
+                                         num_groups=1)
+
+    def test_check_nans_false_opts_out_of_the_scan(self):
+        """check_nans=False skips the pre-job data pass (the hot-loop
+        escape hatch mirroring QuantileService); clean data stays exact."""
+        mesh = make_mesh((1,), ("data",))
+        rng = np.random.default_rng(3)
+        x = rng.normal(size=256).astype(np.float32)
+        got = float(distributed_quantile(jnp.asarray(x), 0.5, mesh,
+                                         check_nans=False))
+        assert got == np.sort(x)[127]
+        distributed_quantile(_with_nan(), 0.5, mesh,
+                             check_nans=False)   # caller's contract now
+
+
+class TestServicePolicy:
+    def test_ingest_rejects_so_queries_never_see_nan(self):
+        svc = QuantileService(eps=0.01)
+        with pytest.raises(ValueError, match="NaN"):
+            svc.ingest("s", _with_nan())
+        # the poisoned batch was not buffered: stream still empty
+        assert svc.stream_count("s") == 0
+
+    def test_ingest_grouped_rejects(self):
+        svc = QuantileService(eps=0.01)
+        with pytest.raises(ValueError, match="NaN"):
+            svc.ingest_grouped("s", _with_nan(), jnp.zeros((256,), jnp.int32))
+        assert svc.grouped_stream_count("s") == 0
+
+    def test_calibrator_observe_rejects(self):
+        cal = StreamingCalibrator()
+        with pytest.raises(ValueError, match="NaN"):
+            cal.observe("logits", _with_nan())
+
+    def test_check_nans_false_opts_out(self):
+        """check_nans=False hands the NaN-free contract to the caller (no
+        per-batch device sync); ingest must not raise."""
+        svc = QuantileService(eps=0.01, check_nans=False)
+        svc.ingest("s", _with_nan())
+        assert svc.stream_count("s") == 256
+
+    def test_clean_stream_still_exact(self):
+        rng = np.random.default_rng(2)
+        svc = QuantileService(eps=0.01)
+        x = rng.normal(size=2048).astype(np.float32)
+        svc.ingest("s", x)
+        assert float(svc.exact("s", 0.5)) == np.sort(x)[1023]
+
+
+class TestTracedContract:
+    def test_check_skipped_under_jit(self):
+        """Inside a trace the check cannot raise — pinned as the documented
+        contract (callers embedding the engine in jit own NaN hygiene)."""
+        @jax.jit
+        def f(parts):
+            return gk_select(parts, 0.5)
+
+        out = f(_with_nan().reshape(4, 64))   # traces + runs, no raise
+        assert out.shape == ()
+
+    def test_reject_nans_helper_is_noop_for_tracers(self):
+        def f(x):
+            reject_nans(x, "inside-jit")   # must not raise on a tracer
+            return x.sum()
+
+        jax.jit(f)(_with_nan())
