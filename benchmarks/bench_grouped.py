@@ -51,8 +51,11 @@ def run(csv_rows):
     pivots = jnp.asarray(np.array(wants, np.float32).reshape(G, 1))
 
     # ---- structural: per-shard HBM passes, G groups: 3G -> 1 --------------
+    # backend="pallas" pins the kernel contract (the CPU dispatch default
+    # is the jnp oracle, which honestly streams 3 per (group, level))
     ops.reset_hbm_passes()
-    mc, mb, ma = ops.segmented_count_extract(x, keys, pivots, cap)
+    mc, mb, ma = ops.segmented_count_extract(x, keys, pivots, cap,
+                                             backend="pallas")
     jax.block_until_ready(mc)
     fused_passes = ops.hbm_passes()
     assert fused_passes == 1, fused_passes

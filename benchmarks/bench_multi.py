@@ -48,8 +48,11 @@ def run(csv_rows):
     pivots = jnp.asarray(np.quantile(np.asarray(x), qs).astype(np.float32))
 
     # ---- structural: per-shard HBM passes, Q pivots: 3Q -> 1 --------------
+    # backend="pallas" pins the kernel contract (the CPU dispatch default
+    # is the jnp oracle, which honestly streams 3 per pivot)
     ops.reset_hbm_passes()
-    mc, mb, ma = ops.fused_count_extract_multi(x, pivots, cap)
+    mc, mb, ma = ops.fused_count_extract_multi(x, pivots, cap,
+                                               backend="pallas")
     jax.block_until_ready(mc)
     fused_passes = ops.hbm_passes()
     assert fused_passes == 1, fused_passes

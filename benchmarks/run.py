@@ -1,8 +1,10 @@
 """Benchmark harness: one module per paper table/figure.
 Prints ``name,us_per_call,derived`` CSV and writes two artifacts next to
-this file: ``bench_results.csv`` (human diffable) and ``BENCH_results.json``
-(machine-readable name -> {us_per_call, derived} so the perf trajectory is
-tracked across PRs).
+this file with one unified stem: ``BENCH_results.csv`` (human diffable) and
+``BENCH_results.json`` (machine-readable; schema in docs/PERFORMANCE.md —
+name -> {us_per_call, derived}, plus a ``_meta`` record carrying platform /
+default backend / jax version / smoke flag) so the perf trajectory is
+tracked across PRs.
 
 ``REPRO_BENCH_SMOKE=1`` (or ``--smoke``) runs a ~30s subset on tiny sizes —
 the CI configuration — and writes to ``*.smoke.*`` filenames so it never
@@ -36,6 +38,7 @@ MODULES = [
 # smoke: only the modules that honour REPRO_BENCH_SMOKE sizing and finish
 # in seconds on CPU (the shard_map/HLO modules spawn 8-device subprocesses).
 SMOKE_MODULES = [
+    ("roofline", bench_roofline),
     ("fused", bench_fused),
     ("multi", bench_multi),
     ("service", bench_service),
@@ -67,7 +70,7 @@ def main() -> None:
     # Smoke runs write to *.smoke.* so they never clobber the tracked
     # full-run trajectory artifacts.
     suffix = ".smoke" if smoke else ""
-    with open(os.path.join(here, f"bench_results{suffix}.csv"), "w") as f:
+    with open(os.path.join(here, f"BENCH_results{suffix}.csv"), "w") as f:
         f.write(text)
 
     def _num(us):
@@ -76,8 +79,16 @@ def main() -> None:
         except ValueError:
             return us
 
+    import jax
+    from repro.kernels import dispatch
     payload = {name: {"us_per_call": _num(us), "derived": derived}
                for name, us, derived in rows[1:]}
+    payload["_meta"] = {
+        "platform": jax.default_backend(),
+        "default_backend": dispatch.select_backend().name,
+        "jax": jax.__version__,
+        "smoke": smoke,
+    }
     with open(os.path.join(here, f"BENCH_results{suffix}.json"), "w") as f:
         json.dump(payload, f, indent=2, sort_keys=True)
         f.write("\n")

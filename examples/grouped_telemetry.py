@@ -52,7 +52,9 @@ for t in range(TENANTS):
 print("\nevery cell bit-identical to the per-tenant sort oracle")
 
 # --- the streaming face: ragged ingest, one fused HBM pass per chunk --------
-svc = QuantileService(eps=0.01, fused=True)
+# backend="pallas" pins the one-pass kernel contract; the CPU dispatch
+# default (jnp) would honestly stream 3*G*Q passes per chunk instead
+svc = QuantileService(eps=0.01, fused=True, backend="pallas")
 for day in range(4):                      # e.g. four ingestion windows
     m = rng.integers(3000, 9000)
     t = rng.choice(TENANTS, size=m, p=weights).astype(np.int32)

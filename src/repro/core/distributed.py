@@ -50,13 +50,21 @@ def distributed_quantile(x: jax.Array, q: float, mesh: Mesh, *,
                          axis: str = "data", eps: float = 0.01,
                          method: str = "gk_select", speculative: bool = False,
                          reduce_strategy: str = "tree",
-                         fused: bool = False,
+                         fused: bool = False, backend=None,
                          check_nans: bool = True) -> jax.Array:
     """Exact (or approximate, method='approx') quantile of a 1-D array sharded
     over ``axis`` of ``mesh``.  The entry point used by optimizer/serving
-    integrations.  ``fused=True`` injects the single-pass Pallas band
-    extraction into the gk_select body (one HBM stream per shard for the
-    whole count+extract phase).
+    integrations.
+
+    Exactness guarantee: for every exact method ('gk_select', 'afs',
+    'jeffers', 'full_sort') the answer is bit-identical to the global sort
+    oracle; eps and the flags below only steer data movement.
+
+    ``fused=True`` injects the fused count+extract seam into the gk_select
+    body; ``backend`` is the kernel-dispatch handle the seam closes over
+    (None = per-platform default — compiled Pallas on TPU, jitted jnp
+    fallback on CPU; "pallas"/"pallas_interpret"/"jnp" or a
+    ``kernels.dispatch.Backend`` pin it).  Ignored without ``fused``.
 
     NaN policy: reject (DESIGN.md §7).  The check is one extra data pass +
     a host sync before the job; ``check_nans=False`` opts out and transfers
@@ -75,7 +83,7 @@ def distributed_quantile(x: jax.Array, q: float, mesh: Mesh, *,
             raise ValueError(f"fused=True only applies to method='gk_select', "
                              f"got method={method!r}")
         from ..kernels.ops import make_fused_fn   # lazy: kernels optional
-        fused_fn = make_fused_fn()
+        fused_fn = make_fused_fn(backend=backend)
 
     bodies = {
         "gk_select": functools.partial(gk_select_sharded, q=q, eps=eps,
@@ -101,15 +109,17 @@ def distributed_quantile(x: jax.Array, q: float, mesh: Mesh, *,
 def distributed_quantile_multi(x: jax.Array, qs: Sequence[float], mesh: Mesh,
                                *, axis: str = "data", eps: float = 0.01,
                                reduce_strategy: str = "tree",
-                               fused: bool = False,
+                               fused: bool = False, backend=None,
                                pivots=None, cap: int = None,
                                check_nans: bool = True) -> jax.Array:
     """Exact quantiles at ALL the (static) levels in ``qs`` from one sharded
     job: one sketch phase, one count+extract pass per shard (fused=True
-    streams the shard from HBM once for every pivot via the multi-pivot
-    Pallas kernel — 3Q passes -> 1), one butterfly for all Q candidate
-    buffers.  Returns the (Q,) values, replicated.  Works on any shard
-    count, power of two or not.
+    with a Pallas ``backend`` streams the shard from HBM once for every
+    pivot via the multi-pivot kernel — 3Q passes -> 1; ``backend=None``
+    selects per platform, see ``distributed_quantile``), one butterfly for
+    all Q candidate buffers.  Returns the (Q,) values, replicated — every
+    level bit-identical to the sort oracle.  Works on any shard count,
+    power of two or not.
 
     ``pivots`` runs the job WARM (DESIGN.md §6): a (Q,) vector of
     externally-maintained pivots (e.g. from a live ``SketchState``) skips
@@ -132,7 +142,7 @@ def distributed_quantile_multi(x: jax.Array, qs: Sequence[float], mesh: Mesh,
     fused_fn = None
     if fused:
         from ..kernels.ops import make_fused_multi_fn   # lazy: kernels optional
-        fused_fn = make_fused_multi_fn()
+        fused_fn = make_fused_multi_fn(backend=backend)
 
     body = functools.partial(gk_select_multi_sharded, qs=qs, eps=eps,
                              axis=axis, num_shards=num_shards,

@@ -222,13 +222,16 @@ def distributed_quantile_grouped(values: jax.Array, keys: jax.Array,
                                  num_groups: int, axis: str = "data",
                                  eps: float = 0.01,
                                  reduce_strategy: str = "tree",
-                                 fused: bool = False, ks=None,
+                                 fused: bool = False, backend=None, ks=None,
                                  check_nans: bool = True) -> jax.Array:
     """Exact per-group quantiles over a mesh: ``values`` and ``keys`` are
     flat arrays sharded over ``axis``; returns the (num_groups, len(qs))
-    exact values, replicated.  ``fused=True`` injects the segmented Pallas
-    kernel — one HBM stream per shard for all G*Q pivots.  NaN policy:
-    reject; ``check_nans=False`` opts out (see ``distributed_quantile``)."""
+    exact values, replicated — every (group, level) cell bit-identical to
+    the per-group sort oracle.  ``fused=True`` injects the segmented
+    count+extract seam (on a Pallas ``backend``: one HBM stream per shard
+    for all G*Q pivots; ``backend=None`` selects per platform — see
+    ``distributed_quantile``).  NaN policy: reject; ``check_nans=False``
+    opts out (see ``distributed_quantile``)."""
     num_shards = mesh.shape[axis]
     qs = tuple(float(q) for q in qs)
     if not qs:
@@ -246,7 +249,7 @@ def distributed_quantile_grouped(values: jax.Array, keys: jax.Array,
     segmented_fn = None
     if fused:
         from ..kernels.ops import make_segmented_fn   # lazy: kernels optional
-        segmented_fn = make_segmented_fn()
+        segmented_fn = make_segmented_fn(backend=backend)
 
     body = functools.partial(gk_select_grouped_sharded, qs=qs,
                              num_groups=num_groups, eps=eps, axis=axis,
@@ -264,10 +267,11 @@ def distributed_quantile_grouped(values: jax.Array, keys: jax.Array,
 
 
 @functools.partial(jax.jit, static_argnames=("qs", "num_groups", "eps",
-                                             "block_select", "ks"))
+                                             "block_select", "ks",
+                                             "backend"))
 def _gk_select_grouped_jit(values: jax.Array, keys: jax.Array, qs: tuple,
                            num_groups: int, eps: float, block_select: bool,
-                           ks) -> jax.Array:
+                           ks, backend=None) -> jax.Array:
     P_, n_i = values.shape
     n = P_ * n_i
     G, Q = num_groups, len(qs)
@@ -287,8 +291,8 @@ def _gk_select_grouped_jit(values: jax.Array, keys: jax.Array, qs: tuple,
     if block_select:
         from ..kernels import ops as kernel_ops   # lazy: kernels optional
         c, b, a = jax.vmap(
-            lambda v, k: kernel_ops.segmented_count_extract(v, k, pivots,
-                                                            cap))(values, keys)
+            lambda v, k: kernel_ops.segmented_count_extract(
+                v, k, pivots, cap, backend=backend))(values, keys)
     else:
         c, b, a = jax.vmap(
             lambda v, k: local_ops.grouped_count_extract(v, k, pivots,
@@ -304,13 +308,15 @@ def _gk_select_grouped_jit(values: jax.Array, keys: jax.Array, qs: tuple,
 def gk_select_grouped(values: jax.Array, keys: jax.Array,
                       qs: Sequence[float], *, num_groups: int,
                       eps: float = 0.01, block_select: bool = False,
-                      ks=None) -> jax.Array:
+                      ks=None, backend=None) -> jax.Array:
     """Single-process grouped GK Select: ``values``/``keys`` are (P, n_i)
     arrays whose leading axis plays the shard role (exactly like
     ``core.select.gk_select``).  Returns the (num_groups, len(qs)) exact
-    values.  ``block_select=True`` routes phase 3 through the segmented
-    Pallas kernel (one HBM stream per pseudo-shard).  ``ks`` (static
-    scalar or tuple) overrides the q-derived per-group ranks."""
+    values (bit-identical to the per-group sort oracle; NaN policy:
+    reject).  ``block_select=True`` routes phase 3 through the segmented
+    kernel entry (one stream per pseudo-shard on a Pallas ``backend``;
+    ``backend=None`` selects per platform — see ``gk_select``).  ``ks``
+    (static scalar or tuple) overrides the q-derived per-group ranks."""
     if values.ndim != 2 or values.shape != keys.shape:
         raise ValueError("values/keys must be matching (P, n_i) arrays")
     local_ops.reject_nans(values, "gk_select_grouped")
@@ -319,4 +325,4 @@ def gk_select_grouped(values: jax.Array, keys: jax.Array,
     return _gk_select_grouped_jit(values, jnp.asarray(keys, jnp.int32),
                                   tuple(float(q) for q in qs),
                                   int(num_groups), float(eps),
-                                  bool(block_select), ks)
+                                  bool(block_select), ks, backend=backend)

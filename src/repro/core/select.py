@@ -37,10 +37,10 @@ def _pivot_from_sample_sketch(parts: jax.Array, k: jax.Array, eps: float) -> jax
 
 
 @functools.partial(jax.jit, static_argnames=("q", "eps", "speculative",
-                                             "block_select", "k"))
+                                             "block_select", "k", "backend"))
 def _gk_select_jit(parts: jax.Array, q: float, *, eps: float = 0.01,
                    speculative: bool = False, block_select: bool = False,
-                   k: int = None) -> jax.Array:
+                   k: int = None, backend=None) -> jax.Array:
     """Exact q-quantile (k = ceil(q*n), 1-based) of a (P, n_i) partitioned array.
 
     Exactness does not depend on eps; eps only sizes the sketch and the
@@ -51,10 +51,13 @@ def _gk_select_jit(parts: jax.Array, q: float, *, eps: float = 0.01,
     with +inf padding, ``q * n_padded`` lies about the true target rank
     while a rank on the unpadded count stays exact.
 
-    ``block_select=True`` routes the count+extract work through the fused
-    Pallas band-extraction kernel (``kernels.ops.fused_count_extract``):
-    one HBM stream per shard instead of three, with the speculative
-    two-sided data flow (it subsumes ``speculative``).
+    ``block_select=True`` routes the count+extract work through the kernel
+    layer (``kernels.ops.fused_count_extract``) with the speculative
+    two-sided data flow (it subsumes ``speculative``); ``backend`` picks
+    the kernel implementation (None = per-platform default: compiled
+    Pallas on TPU, jitted jnp fallback on CPU — see
+    ``kernels.dispatch.select_backend``) and is ignored without
+    ``block_select``.
     """
     P, n_i = parts.shape
     n = P * n_i
@@ -73,7 +76,8 @@ def _gk_select_jit(parts: jax.Array, q: float, *, eps: float = 0.01,
         # kernels layer.)
         from ..kernels import ops as kernel_ops
         counts, below, above = jax.vmap(
-            lambda x: kernel_ops.fused_count_extract(x, pivot, cap))(parts)
+            lambda x: kernel_ops.fused_count_extract(
+                x, pivot, cap, backend=backend))(parts)
         counts = counts.sum(0)
         return local_ops.resolve(pivot, k, counts[0], counts[1],
                                  below, above, cap)
@@ -112,8 +116,14 @@ def _gk_select_jit(parts: jax.Array, q: float, *, eps: float = 0.01,
 
 def gk_select(parts: jax.Array, q: float, *, eps: float = 0.01,
               speculative: bool = False, block_select: bool = False,
-              k: int = None, check_nans: bool = True) -> jax.Array:
+              k: int = None, check_nans: bool = True,
+              backend=None) -> jax.Array:
     """Eager entry for ``_gk_select_jit`` (same signature and semantics).
+
+    Exactness guarantee: the result is bit-identical to
+    ``sorted(parts.ravel())[ceil(q*n) - 1]`` regardless of ``eps``,
+    ``speculative``, ``block_select`` or ``backend`` — those flags change
+    the data movement, never the answer.
 
     NaN policy: reject (``local_ops.reject_nans``; DESIGN.md §7) — float
     inputs containing NaN raise ``ValueError`` here; when ``parts`` is a
@@ -121,11 +131,15 @@ def gk_select(parts: jax.Array, q: float, *, eps: float = 0.01,
     input is the caller's contract.  The check is one extra data pass + a
     host sync; ``check_nans=False`` opts out for hot loops (mirroring the
     sharded entries and ``QuantileService``).
+
+    ``backend`` (None | "pallas" | "pallas_interpret" | "jnp" | a
+    ``kernels.dispatch.Backend``) picks the kernel implementation when
+    ``block_select=True``; None selects per platform at trace time.
     """
     if check_nans:
         local_ops.reject_nans(parts, "gk_select")
     return _gk_select_jit(parts, q, eps=eps, speculative=speculative,
-                          block_select=block_select, k=k)
+                          block_select=block_select, k=k, backend=backend)
 
 
 def exact_quantile(x: jax.Array, q: float, *, eps: float = 0.01,
@@ -157,17 +171,19 @@ def exact_quantile_rank(x: jax.Array, k: int, *, eps: float = 0.01,
 
 
 @functools.partial(jax.jit, static_argnames=("qs", "eps", "speculative",
-                                             "block_select"))
+                                             "block_select", "backend"))
 def _gk_select_multi_jit(parts: jax.Array, qs: tuple, *, eps: float = 0.01,
                          speculative: bool = True,
-                         block_select: bool = False) -> jax.Array:
+                         block_select: bool = False,
+                         backend=None) -> jax.Array:
     """Beyond-paper: Q quantiles in one job (qs is a static tuple of floats).
     The sketch phase is shared; the count/extract phases vmap over pivots
     (Spark would run Q separate jobs).
 
-    ``block_select=True`` uses the multi-pivot fused kernel
-    (``kernels.ops.fused_count_extract_multi``): each shard is streamed
-    from HBM ONCE for all Q pivots, instead of 3 passes per pivot."""
+    ``block_select=True`` uses the multi-pivot fused kernel entry
+    (``kernels.ops.fused_count_extract_multi``): on a Pallas backend each
+    shard is streamed from HBM ONCE for all Q pivots, instead of 3 passes
+    per pivot; ``backend`` picks the implementation (see ``gk_select``)."""
     P, n_i = parts.shape
     n = P * n_i
     ks = jnp.array([local_ops.target_rank(n, q) for q in qs], jnp.int32)
@@ -182,7 +198,8 @@ def _gk_select_multi_jit(parts: jax.Array, qs: tuple, *, eps: float = 0.01,
     if block_select:
         from ..kernels import ops as kernel_ops
         counts, below, above = jax.vmap(
-            lambda x: kernel_ops.fused_count_extract_multi(x, pivots, cap))(parts)
+            lambda x: kernel_ops.fused_count_extract_multi(
+                x, pivots, cap, backend=backend))(parts)
         counts = counts.sum(0)                     # (Q, 3)
         below = jnp.swapaxes(below, 0, 1)          # (P, Q, cap) -> (Q, P, cap)
         above = jnp.swapaxes(above, 0, 1)
@@ -203,11 +220,16 @@ def _gk_select_multi_jit(parts: jax.Array, qs: tuple, *, eps: float = 0.01,
 
 def gk_select_multi(parts: jax.Array, qs: tuple, *, eps: float = 0.01,
                     speculative: bool = True, block_select: bool = False,
-                    check_nans: bool = True) -> jax.Array:
+                    check_nans: bool = True, backend=None) -> jax.Array:
     """Eager entry for ``_gk_select_multi_jit`` (same signature/semantics).
-    NaN policy: reject; ``check_nans=False`` opts out (see ``gk_select``)."""
+
+    Exactness guarantee: every returned level is bit-identical to the sort
+    oracle, independent of eps/flags.  NaN policy: reject;
+    ``check_nans=False`` opts out (see ``gk_select``).  ``backend`` picks
+    the kernel implementation when ``block_select=True`` (see
+    ``gk_select``)."""
     if check_nans:
         local_ops.reject_nans(parts, "gk_select_multi")
     return _gk_select_multi_jit(parts, tuple(qs), eps=eps,
                                 speculative=speculative,
-                                block_select=block_select)
+                                block_select=block_select, backend=backend)

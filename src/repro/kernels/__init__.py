@@ -9,16 +9,21 @@ fused_select    — single-pass fused band extraction: counts + both capped
 segmented_select — the grouped engine's kernel: counts + candidate buffers
                   for every (group, level) pivot, keyed by a per-element
                   group id, in ONE HBM stream (3*G*Q passes -> 1)
-ops             — dispatch wrappers, HBM-pass counter, sortable-uint
+dispatch        — the backend registry: Pallas-compiled / Pallas-interpret /
+                  jnp selected per platform at trace time, with per-backend
+                  tile sizing and VMEM budgeting (docs/PERFORMANCE.md)
+ops             — backend-aware wrappers, HBM-pass counter, sortable-uint
                   transform, radix_select_kth, injection hooks
 ref             — pure-jnp oracles the kernel tests compare against
 """
-from . import ops, ref
+from . import dispatch, ops, ref
+from .dispatch import Backend, LaunchPlan, select_backend
 from .partition_count import partition_count, LANES
 from .band_count import band_count
 from .fused_select import fused_select, fused_select_multi, byte_histogram
 from .segmented_select import segmented_select
 
-__all__ = ["ops", "ref", "partition_count", "band_count", "fused_select",
+__all__ = ["dispatch", "ops", "ref", "Backend", "LaunchPlan",
+           "select_backend", "partition_count", "band_count", "fused_select",
            "fused_select_multi", "byte_histogram", "segmented_select",
            "LANES"]

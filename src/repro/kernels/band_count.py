@@ -17,7 +17,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
-from .partition_count import LANES, DEFAULT_BLOCK_ROWS
+from .partition_count import (DEFAULT_BLOCK_ROWS, check_lanes,
+                              tpu_call_params)
 
 
 def _band_count_kernel(bounds_ref, x_ref, out_ref, *, n_valid: int,
@@ -31,23 +32,23 @@ def _band_count_kernel(bounds_ref, x_ref, out_ref, *, n_valid: int,
     x = x_ref[...]
     lo = bounds_ref[0]
     hi = bounds_ref[1]
-    base = step * block_rows * LANES
+    lanes = x.shape[1]
+    base = step * block_rows * lanes
     row = jax.lax.broadcasted_iota(jnp.int32, x.shape, 0)
     col = jax.lax.broadcasted_iota(jnp.int32, x.shape, 1)
-    valid = (base + row * LANES + col) < n_valid
+    valid = (base + row * lanes + col) < n_valid
     out_ref[0] += jnp.sum(jnp.where(valid & (x > lo) & (x < hi), 1, 0),
                           dtype=jnp.int32)
 
 
 @functools.partial(jax.jit, static_argnames=("n_valid", "block_rows",
-                                             "interpret"))
+                                             "interpret", "vmem_limit"))
 def band_count(x2d: jax.Array, lo: jax.Array, hi: jax.Array, *, n_valid: int,
                block_rows: int = DEFAULT_BLOCK_ROWS,
-               interpret: bool = True) -> jax.Array:
+               interpret: bool = True, vmem_limit: int = None) -> jax.Array:
     """int32 count of elements of the first n_valid lanes inside (lo, hi)."""
     rows, lanes = x2d.shape
-    if lanes != LANES:
-        raise ValueError(f"expected trailing dim {LANES}, got {lanes}")
+    check_lanes(lanes)
     block_rows = min(block_rows, rows)
     grid = (pl.cdiv(rows, block_rows),)
     kernel = functools.partial(_band_count_kernel, n_valid=n_valid,
@@ -58,10 +59,11 @@ def band_count(x2d: jax.Array, lo: jax.Array, hi: jax.Array, *, n_valid: int,
         grid=grid,
         in_specs=[
             pl.BlockSpec(memory_space=pltpu.SMEM),
-            pl.BlockSpec((block_rows, LANES), lambda i: (i, 0)),
+            pl.BlockSpec((block_rows, lanes), lambda i: (i, 0)),
         ],
         out_specs=pl.BlockSpec(memory_space=pltpu.SMEM),
         out_shape=jax.ShapeDtypeStruct((1,), jnp.int32),
         interpret=interpret,
+        **tpu_call_params(interpret, vmem_limit),
     )(bounds, x2d)
     return out[0]

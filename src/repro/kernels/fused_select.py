@@ -28,9 +28,10 @@ jaxpr on CPU).  The merge operand lives entirely in VMEM, so HBM traffic
 stays one read of the shard plus O(cap) writeback.
 
 Layout contract is shared with ``partition_count``: callers pad the flat
-shard to (rows, LANES) row-major and pass the true length as ``n_valid``;
-``cap_pad`` must be a positive multiple of 128 (wrappers in ``ops`` round
-up and slice back down).
+shard to (rows, lanes) row-major — lanes any positive multiple of 128,
+dtype-specialized by ``dispatch.lanes_for`` — and pass the true length as
+``n_valid``; ``cap_pad`` must be a positive multiple of 128 (the dispatch
+layer rounds up and slices back down).
 """
 from __future__ import annotations
 
@@ -41,7 +42,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
-from .partition_count import LANES, DEFAULT_BLOCK_ROWS
+from .partition_count import (DEFAULT_BLOCK_ROWS, check_lanes,
+                              tpu_call_params)
 
 
 def _sentinels(dtype):
@@ -53,9 +55,10 @@ def _sentinels(dtype):
 
 
 def _valid_mask(x, step, block_rows, n_valid):
+    lanes = x.shape[1]
     row = jax.lax.broadcasted_iota(jnp.int32, x.shape, 0)
     col = jax.lax.broadcasted_iota(jnp.int32, x.shape, 1)
-    return (step * block_rows * LANES + row * LANES + col) < n_valid
+    return (step * block_rows * lanes + row * lanes + col) < n_valid
 
 
 def _merge_below(buf_row, keys, cap_pad):
@@ -111,23 +114,24 @@ def _fused_kernel(pivot_ref, x_ref, count_ref, below_ref, above_ref, *,
 
 
 @functools.partial(jax.jit, static_argnames=("n_valid", "cap_pad",
-                                             "block_rows", "interpret"))
+                                             "block_rows", "interpret",
+                                             "vmem_limit"))
 def fused_select(x2d: jax.Array, pivot: jax.Array, *, n_valid: int,
                  cap_pad: int, block_rows: int = DEFAULT_BLOCK_ROWS,
-                 interpret: bool = True):
-    """One streaming pass over the (rows, LANES) shard: returns
+                 interpret: bool = True, vmem_limit: int = None):
+    """One streaming pass over the (rows, lanes) shard: returns
     ``(counts, below, above)`` where counts is the int32 (lt, eq, gt)
     triple, below is the (cap_pad,) largest values < pivot (descending,
     -sentinel padded) and above the (cap_pad,) smallest values > pivot
     (ascending, +sentinel padded).
 
-    VMEM per step: tile (block_rows*LANES) + 2 merge operands of
-    (block_rows*LANES + cap_pad) lanes — 128x1024 f32 tiles stay ~1.5 MiB,
-    comfortably double-bufferable in 16 MiB VMEM.
+    VMEM per step: tile (block_rows*lanes) + 2 merge operands of
+    (block_rows*lanes + cap_pad) lanes — 128x1024 f32 tiles stay ~1.5 MiB,
+    comfortably double-bufferable in 16 MiB VMEM (the dispatch plan sizes
+    block_rows and passes the assumed footprint as ``vmem_limit``).
     """
     rows, lanes = x2d.shape
-    if lanes != LANES:
-        raise ValueError(f"expected trailing dim {LANES}, got {lanes}")
+    check_lanes(lanes)
     if cap_pad <= 0 or cap_pad % 128:
         raise ValueError(f"cap_pad must be a positive multiple of 128, "
                          f"got {cap_pad}")
@@ -140,7 +144,7 @@ def fused_select(x2d: jax.Array, pivot: jax.Array, *, n_valid: int,
         grid=grid,
         in_specs=[
             pl.BlockSpec(memory_space=pltpu.SMEM),
-            pl.BlockSpec((block_rows, LANES), lambda i: (i, 0)),
+            pl.BlockSpec((block_rows, lanes), lambda i: (i, 0)),
         ],
         out_specs=[
             pl.BlockSpec(memory_space=pltpu.SMEM),
@@ -153,6 +157,7 @@ def fused_select(x2d: jax.Array, pivot: jax.Array, *, n_valid: int,
             jax.ShapeDtypeStruct((1, cap_pad), x2d.dtype),
         ],
         interpret=interpret,
+        **tpu_call_params(interpret, vmem_limit),
     )(pivot.reshape(1), x2d)
     return counts, below[0], above[0]
 
@@ -197,15 +202,15 @@ def _fused_multi_kernel(pivots_ref, x_ref, count_ref, below_ref, above_ref, *,
 
 
 @functools.partial(jax.jit, static_argnames=("n_valid", "cap_pad",
-                                             "block_rows", "interpret"))
+                                             "block_rows", "interpret",
+                                             "vmem_limit"))
 def fused_select_multi(x2d: jax.Array, pivots: jax.Array, *, n_valid: int,
                        cap_pad: int, block_rows: int = DEFAULT_BLOCK_ROWS,
-                       interpret: bool = True):
+                       interpret: bool = True, vmem_limit: int = None):
     """``fused_select`` against Q pivots in the same single data pass:
     returns ``(counts (Q, 3), below (Q, cap_pad), above (Q, cap_pad))``."""
     rows, lanes = x2d.shape
-    if lanes != LANES:
-        raise ValueError(f"expected trailing dim {LANES}, got {lanes}")
+    check_lanes(lanes)
     if cap_pad <= 0 or cap_pad % 128:
         raise ValueError(f"cap_pad must be a positive multiple of 128, "
                          f"got {cap_pad}")
@@ -220,7 +225,7 @@ def fused_select_multi(x2d: jax.Array, pivots: jax.Array, *, n_valid: int,
         grid=grid,
         in_specs=[
             pl.BlockSpec(memory_space=pltpu.SMEM),
-            pl.BlockSpec((block_rows, LANES), lambda i: (i, 0)),
+            pl.BlockSpec((block_rows, lanes), lambda i: (i, 0)),
         ],
         out_specs=[
             pl.BlockSpec(memory_space=pltpu.SMEM),
@@ -233,6 +238,7 @@ def fused_select_multi(x2d: jax.Array, pivots: jax.Array, *, n_valid: int,
             jax.ShapeDtypeStruct((num_pivots, cap_pad), x2d.dtype),
         ],
         interpret=interpret,
+        **tpu_call_params(interpret, vmem_limit),
     )(pivots, x2d)
 
 
@@ -278,16 +284,17 @@ def _byte_histogram_kernel(params_ref, u_ref, hist_ref, *, n_valid: int,
 
 
 @functools.partial(jax.jit, static_argnames=("n_valid", "shift",
-                                             "block_rows", "interpret"))
+                                             "block_rows", "interpret",
+                                             "vmem_limit"))
 def byte_histogram(u2d: jax.Array, prefix: jax.Array, mask: jax.Array, *,
                    n_valid: int, shift: int,
                    block_rows: int = DEFAULT_BLOCK_ROWS,
-                   interpret: bool = True) -> jax.Array:
+                   interpret: bool = True,
+                   vmem_limit: int = None) -> jax.Array:
     """(256,) int32 histogram of the ``shift``-positioned byte among the
     first ``n_valid`` elements matching ``(u & mask) == prefix``."""
     rows, lanes = u2d.shape
-    if lanes != LANES:
-        raise ValueError(f"expected trailing dim {LANES}, got {lanes}")
+    check_lanes(lanes)
     if u2d.dtype != jnp.uint32:
         raise TypeError(f"byte_histogram wants uint32, got {u2d.dtype}")
     block_rows = min(block_rows, rows)
@@ -301,10 +308,11 @@ def byte_histogram(u2d: jax.Array, prefix: jax.Array, mask: jax.Array, *,
         grid=grid,
         in_specs=[
             pl.BlockSpec(memory_space=pltpu.SMEM),
-            pl.BlockSpec((block_rows, LANES), lambda i: (i, 0)),
+            pl.BlockSpec((block_rows, lanes), lambda i: (i, 0)),
         ],
         out_specs=pl.BlockSpec((1, HIST_BINS), lambda i: (0, 0)),
         out_shape=jax.ShapeDtypeStruct((1, HIST_BINS), jnp.int32),
         interpret=interpret,
+        **tpu_call_params(interpret, vmem_limit),
     )(params, u2d)
     return hist[0]

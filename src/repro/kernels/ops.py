@@ -1,4 +1,4 @@
-"""Dispatch wrappers around the Pallas kernels + the TPU-native selection.
+"""Kernel-layer operations: backend-dispatched wrappers + pass accounting.
 
 ``count3`` / ``band_count``      — layout + dispatch (kernel vs jnp oracle).
 ``fused_count_extract``          — the single-pass speculative round: one
@@ -15,33 +15,34 @@
                                    kept as ``radix_select_kth_bitwise`` for
                                    the pass-count benchmark (<= 32 passes).
 
-Every public wrapper here is a plain Python function that bumps the module
-HBM-pass counter once per full-array stream and then dispatches to a jitted
-kernel (or the jnp oracle).  The counter therefore counts *eager dispatches*
-— exactly what ``benchmarks/bench_fused.py`` measures; calls traced inside
-an outer jit tick once at trace time and are not the counter's job.
+Every public wrapper takes ``backend=`` (None | name string | alias |
+``dispatch.Backend``) and routes through ``kernels.dispatch``:
+``backend=None`` selects per platform at trace time (TPU -> compiled
+Pallas, GPU -> gated Pallas-Triton, CPU -> the jitted jnp oracles — the
+wall-clock winner there); ``backend="pallas"`` pins the Pallas kernels
+(compiled on TPU, interpret elsewhere) — what the kernel-contract tests
+and pass-count benchmarks use.  The legacy ``use_pallas=False`` flag is
+kept as a hard alias for ``backend="jnp"``.
 
-On this CPU container kernels run under interpret=True; on TPU the same
-pallas_call compiles natively (set interpret=False via REPRO_PALLAS_NATIVE=1).
+Every wrapper is a plain Python function that bumps the module HBM-pass
+counter once per full-array stream *the selected backend actually
+dispatches* — 1 for a fused Pallas sweep, 3 per pivot for the jnp oracle
+(count + 2x top_k streams), 3*G*Q for the segmented oracle — and then
+executes.  The counter counts eager dispatches — exactly what
+``benchmarks/bench_fused.py`` measures; calls traced inside an outer jit
+tick once at trace time and are not the counter's job.
 """
 from __future__ import annotations
 
 import functools
-import os
 
 import jax
 import jax.numpy as jnp
 
-from . import ref
+from . import dispatch, ref
+from .dispatch import JNP
 from .partition_count import LANES, partition_count
-from .band_count import band_count as _band_count_kernel
-from .fused_select import (fused_select, fused_select_multi,
-                           byte_histogram as _byte_histogram_kernel)
-from .segmented_select import segmented_select
-
-
-def _interpret() -> bool:
-    return os.environ.get("REPRO_PALLAS_NATIVE", "0") != "1"
+from .fused_select import byte_histogram as _byte_histogram_kernel  # noqa: F401 — re-export for tests
 
 
 # ---------------------------------------------------------------------------
@@ -65,43 +66,43 @@ def _tick(n: int = 1) -> None:
     _HBM_PASSES["total"] += n
 
 
-def pad_to_tiles(x: jax.Array) -> jax.Array:
-    """Flat -> (rows, LANES) row-major, padded at the tail (values are masked
-    by n_valid inside the kernels, so the pad content is irrelevant)."""
-    n = x.size
-    rows = max(1, -(-n // LANES))
-    pad = rows * LANES - n
-    if pad:
-        x = jnp.concatenate([x.ravel(), jnp.zeros((pad,), x.dtype)])
-    return x.reshape(rows, LANES)
+def _backend(backend, use_pallas: bool):
+    """Fold the legacy use_pallas flag into the backend spec."""
+    if not use_pallas:
+        return JNP
+    return backend       # None -> dispatch.select_backend() downstream
+
+
+def pad_to_tiles(x: jax.Array, lanes: int = LANES) -> jax.Array:
+    """Flat -> (rows, lanes) row-major, padded at the tail (values are masked
+    by n_valid inside the kernels, so the pad content is irrelevant).
+    ``lanes`` defaults to the 4-byte layout; pass ``dispatch.lanes_for``'s
+    answer for dtype-specialized tiling."""
+    return dispatch.pad_to_lanes(x, lanes)
 
 
 def _cap_pad(cap: int) -> int:
     """Candidate-buffer lanes rounded to the VREG width (multiple of 128)."""
-    return max(128, -(-cap // 128) * 128)
+    return dispatch.cap_pad_for(cap)
 
 
-def count3(x: jax.Array, pivot: jax.Array, *, use_pallas: bool = True) -> jax.Array:
+def count3(x: jax.Array, pivot: jax.Array, *, use_pallas: bool = True,
+           backend=None) -> jax.Array:
     """(lt, eq, gt) of flat x vs pivot — kernel-backed ``local_ops.count3``.
-    One HBM pass."""
+    One HBM pass on every backend."""
     _tick()
-    if not use_pallas:
-        return ref.partition_count_ref(x.ravel(), pivot)
-    x2d = pad_to_tiles(x)
-    return partition_count(x2d, jnp.asarray(pivot, x.dtype), n_valid=x.size,
-                           interpret=_interpret())
+    out, _ = dispatch.run_partition_count(
+        x, pivot, backend=_backend(backend, use_pallas))
+    return out
 
 
 def band_count(x: jax.Array, lo: jax.Array, hi: jax.Array, *,
-               use_pallas: bool = True) -> jax.Array:
+               use_pallas: bool = True, backend=None) -> jax.Array:
     """#{ lo < x < hi } over the flat array.  One HBM pass."""
     _tick()
-    if not use_pallas:
-        return ref.band_count_ref(x.ravel(), lo, hi)
-    x2d = pad_to_tiles(x)
-    return _band_count_kernel(x2d, jnp.asarray(lo, x.dtype),
-                              jnp.asarray(hi, x.dtype), n_valid=x.size,
-                              interpret=_interpret())
+    out, _ = dispatch.run_band_count(
+        x, lo, hi, backend=_backend(backend, use_pallas))
+    return out
 
 
 def extract_below(x: jax.Array, pivot: jax.Array, cap: int) -> jax.Array:
@@ -126,61 +127,45 @@ def extract_above(x: jax.Array, pivot: jax.Array, cap: int) -> jax.Array:
 
 
 def fused_count_extract(x: jax.Array, pivot: jax.Array, cap: int, *,
-                        use_pallas: bool = True):
-    """The speculative GK Select round in ONE streaming pass: returns
-    ``(counts, below, above)`` with the exact semantics of
-    ``(local_ops.count3, local_ops.extract_below, local_ops.extract_above)``
-    — but the shard is read from HBM once instead of three times."""
-    if not use_pallas:
-        _tick(3)   # the jnp oracle really is count + 2x top_k streams
-        return ref.fused_select_ref(x.ravel(), pivot, cap)
-    _tick()
-    x2d = pad_to_tiles(x)
-    counts, below, above = fused_select(
-        x2d, jnp.asarray(pivot, x.dtype), n_valid=x.size,
-        cap_pad=_cap_pad(cap), interpret=_interpret())
-    return counts, below[:cap], above[:cap]
+                        use_pallas: bool = True, backend=None):
+    """The speculative GK Select round: returns ``(counts, below, above)``
+    with the exact semantics of ``(local_ops.count3,
+    local_ops.extract_below, local_ops.extract_above)``.
+
+    On a Pallas backend the shard is read from HBM ONCE (ticks 1); the jnp
+    backend really is count + 2x top_k streams and honestly ticks 3."""
+    out, plan = dispatch.run_fused_select(
+        x, pivot, cap, backend=_backend(backend, use_pallas))
+    _tick(1 if plan.backend.kind == "pallas" else 3)
+    return out
 
 
 def fused_count_extract_multi(x: jax.Array, pivots: jax.Array, cap: int, *,
-                              use_pallas: bool = True):
-    """``fused_count_extract`` against Q pivots in the same single pass:
-    ``(counts (Q, 3), below (Q, cap), above (Q, cap))``.  The unfused
-    pipeline costs 3 passes per pivot; this costs one total."""
-    if not use_pallas:
-        _tick(3 * int(pivots.shape[0]))   # oracle: 3 streams per pivot
-        outs = [ref.fused_select_ref(x.ravel(), p, cap) for p in pivots]
-        return (jnp.stack([o[0] for o in outs]),
-                jnp.stack([o[1] for o in outs]),
-                jnp.stack([o[2] for o in outs]))
-    _tick()
-    x2d = pad_to_tiles(x)
-    counts, below, above = fused_select_multi(
-        x2d, jnp.asarray(pivots, x.dtype), n_valid=x.size,
-        cap_pad=_cap_pad(cap), interpret=_interpret())
-    return counts, below[:, :cap], above[:, :cap]
+                              use_pallas: bool = True, backend=None):
+    """``fused_count_extract`` against Q pivots:
+    ``(counts (Q, 3), below (Q, cap), above (Q, cap))``.  A Pallas backend
+    answers all Q pivots from ONE pass (ticks 1); the jnp oracle streams
+    3 per pivot (ticks 3Q)."""
+    out, plan = dispatch.run_fused_select_multi(
+        x, pivots, cap, backend=_backend(backend, use_pallas))
+    _tick(1 if plan.backend.kind == "pallas" else 3 * int(pivots.shape[0]))
+    return out
 
 
 def segmented_count_extract(values: jax.Array, keys: jax.Array,
                             pivots: jax.Array, cap: int, *,
-                            use_pallas: bool = True):
-    """The grouped engine's phase 3 in ONE streaming pass: per-group counts
-    plus both capped candidate bands for every (group, level) pivot —
-    ``(counts (G, Q, 3), below (G, Q, cap), above (G, Q, cap))`` with the
-    exact semantics of ``local_ops.grouped_count_extract``.  The unfused
-    pipeline costs 3 passes per (group, level); this costs one total."""
+                            use_pallas: bool = True, backend=None):
+    """The grouped engine's phase 3: per-group counts plus both capped
+    candidate bands for every (group, level) pivot — ``(counts (G, Q, 3),
+    below (G, Q, cap), above (G, Q, cap))`` with the exact semantics of
+    ``local_ops.grouped_count_extract``.  A Pallas backend streams the
+    shard ONCE for the whole matrix (ticks 1); the jnp oracle costs 3 per
+    (group, level) and ticks 3*G*Q."""
     G, Q = pivots.shape
-    if not use_pallas:
-        _tick(3 * G * Q)   # oracle: 3 streams per (group, level)
-        return ref.segmented_select_ref(values.ravel(), keys.ravel(),
-                                        pivots, cap)
-    _tick()
-    x2d = pad_to_tiles(values)
-    k2d = pad_to_tiles(keys.astype(jnp.int32))
-    counts, below, above = segmented_select(
-        x2d, k2d, jnp.asarray(pivots, values.dtype), n_valid=values.size,
-        cap_pad=_cap_pad(cap), num_groups=G, interpret=_interpret())
-    return counts, below[:, :, :cap], above[:, :, :cap]
+    out, plan = dispatch.run_segmented_select(
+        values, keys, pivots, cap, backend=_backend(backend, use_pallas))
+    _tick(1 if plan.backend.kind == "pallas" else 3 * int(G) * int(Q))
+    return out
 
 
 # ---------------------------------------------------------------------------
@@ -211,27 +196,21 @@ def from_sortable_u32(u: jax.Array, dtype) -> jax.Array:
 
 
 def byte_histogram(x_or_u: jax.Array, prefix, mask, *, shift: int,
-                   use_pallas: bool = True) -> jax.Array:
+                   use_pallas: bool = True, backend=None) -> jax.Array:
     """(256,) histogram of byte ``(u >> shift) & 0xFF`` among the uint32
-    elements matching ``(u & mask) == prefix``.  One HBM pass.  The input
-    must already be in the sortable-u32 domain."""
+    elements matching ``(u & mask) == prefix``.  One HBM pass on every
+    backend.  The input must already be in the sortable-u32 domain."""
     _tick()
-    u = x_or_u.ravel()
-    if u.dtype != jnp.uint32:
-        raise TypeError(f"byte_histogram wants sortable uint32, got {u.dtype}")
-    if not use_pallas:
-        return ref.byte_histogram_ref(u, prefix, mask, shift)
-    u2d = pad_to_tiles(u)
-    return _byte_histogram_kernel(u2d, jnp.asarray(prefix, jnp.uint32),
-                                  jnp.asarray(mask, jnp.uint32),
-                                  n_valid=u.size, shift=shift,
-                                  interpret=_interpret())
+    out, _ = dispatch.run_byte_histogram(
+        x_or_u, prefix, mask, shift, backend=_backend(backend, use_pallas))
+    return out
 
 
 RADIX_PASSES = 4   # 32 bits / 8 bits per byte-histogram pass
 
 
-def radix_select_kth(x: jax.Array, k, *, use_pallas: bool = True) -> jax.Array:
+def radix_select_kth(x: jax.Array, k, *, use_pallas: bool = True,
+                     backend=None) -> jax.Array:
     """Exact k-th smallest (1-based) of a flat array in exactly 4 streaming
     histogram passes — no sort, no top_k, no data movement.
 
@@ -242,26 +221,22 @@ def radix_select_kth(x: jax.Array, k, *, use_pallas: bool = True) -> jax.Array:
     (``radix_select_kth_bitwise``).
 
     The win is HBM traffic (8x fewer full-array reads), which is the TPU
-    cost model; under CPU *interpret mode* the 256-bin one-hot histogram
-    is emulated compute and wall-clock is worse than the bitwise path —
-    see bench_fused — so benchmarking on this container should read the
-    pass counts, not the microseconds."""
+    cost model; the jnp-backend histogram is also one pass, so the 4-pass
+    structure holds on every backend.  Under Pallas *interpret mode* the
+    256-bin one-hot histogram is emulated compute and wall-clock is worse
+    than the bitwise path — see bench_fused — so benchmarking on a CPU
+    container should read the pass counts, not the microseconds."""
     orig_dtype = x.dtype
     u = to_sortable_u32(x.ravel())
-    u2d = pad_to_tiles(u) if use_pallas else None
-    n = u.size
-    interp = _interpret()
+    bk = _backend(backend, use_pallas)
 
     prefix = jnp.uint32(0)
     mask = jnp.uint32(0)
     kk = jnp.asarray(k, jnp.int32)
     for shift in (24, 16, 8, 0):
         _tick()
-        if use_pallas:
-            hist = _byte_histogram_kernel(u2d, prefix, mask, n_valid=n,
-                                          shift=shift, interpret=interp)
-        else:
-            hist = ref.byte_histogram_ref(u, prefix, mask, shift)
+        hist, _ = dispatch.run_byte_histogram(u, prefix, mask, shift,
+                                              backend=bk)
         csum = jnp.cumsum(hist)
         byte = jnp.argmax(csum >= kk).astype(jnp.uint32)
         kk = kk - (csum[byte] - hist[byte])
@@ -297,17 +272,19 @@ def _bitwise_inner(u2d: jax.Array, u_flat: jax.Array, k, *, n: int,
     return lo
 
 
-def radix_select_kth_bitwise(x: jax.Array, k, *,
-                             use_pallas: bool = True) -> jax.Array:
+def radix_select_kth_bitwise(x: jax.Array, k, *, use_pallas: bool = True,
+                             backend=None) -> jax.Array:
     """The pre-fused selection: bit-at-a-time binary search over the
     sortable-u32 domain, one counting pass per bit (<= 32 passes).  Kept as
     the benchmark baseline for the 4-pass byte-histogram select."""
     _tick(32)
+    bk = dispatch.resolve(_backend(backend, use_pallas))
     orig_dtype = x.dtype
     u = to_sortable_u32(x.ravel())
     u2d = pad_to_tiles(u)
     lo = _bitwise_inner(u2d, u, jnp.asarray(k, jnp.int32), n=u.size,
-                        use_pallas=use_pallas, interpret=_interpret())
+                        use_pallas=(bk.kind == "pallas"),
+                        interpret=bk.interpret)
     out_dtype = jnp.int32 if orig_dtype == jnp.int32 else jnp.float32
     val = from_sortable_u32(lo, out_dtype)
     return val.astype(orig_dtype)
@@ -318,38 +295,45 @@ def radix_select_kth_bitwise(x: jax.Array, k, *,
 # ---------------------------------------------------------------------------
 
 
-def make_count3_fn(use_pallas: bool = True):
+def make_count3_fn(use_pallas: bool = True, backend=None):
     """count3 injection hook for ``gk_select_sharded`` (same signature as
-    local_ops.count3)."""
+    local_ops.count3).  ``backend`` is the dispatch handle the seam closes
+    over (None = select per platform at trace time)."""
     def fn(x, pivot):
-        return count3(x, pivot, use_pallas=use_pallas)
+        return count3(x, pivot, use_pallas=use_pallas, backend=backend)
     return fn
 
 
-def make_fused_fn(use_pallas: bool = True):
+def make_fused_fn(use_pallas: bool = True, backend=None):
     """fused_fn injection hook for ``gk_select_sharded``'s speculative
     phase (same signature as ``local_ops.fused_count_extract``): the whole
-    count+extract round becomes one HBM stream per shard."""
+    count+extract round becomes one stream per shard on a Pallas backend;
+    the closed-over ``backend`` handle replaces the old interpret booleans
+    at the seam."""
     def fn(x, pivot, cap):
-        return fused_count_extract(x, pivot, cap, use_pallas=use_pallas)
+        return fused_count_extract(x, pivot, cap, use_pallas=use_pallas,
+                                   backend=backend)
     return fn
 
 
-def make_segmented_fn(use_pallas: bool = True):
+def make_segmented_fn(use_pallas: bool = True, backend=None):
     """segmented_fn injection hook for ``gk_select_grouped_sharded``: the
-    whole (G, Q)-pivot grouped count+extract phase becomes ONE HBM stream
-    per shard (``(values, keys, pivots, cap) -> (counts (G,Q,3),
-    below (G,Q,cap), above (G,Q,cap))``)."""
+    whole (G, Q)-pivot grouped count+extract phase in one dispatch
+    (``(values, keys, pivots, cap) -> (counts (G,Q,3), below (G,Q,cap),
+    above (G,Q,cap))``)."""
     def fn(values, keys, pivots, cap):
         return segmented_count_extract(values, keys, pivots, cap,
-                                       use_pallas=use_pallas)
+                                       use_pallas=use_pallas,
+                                       backend=backend)
     return fn
 
 
-def make_fused_multi_fn(use_pallas: bool = True):
+def make_fused_multi_fn(use_pallas: bool = True, backend=None):
     """fused_fn injection hook for ``gk_select_multi_sharded``: the whole
-    Q-pivot count+extract phase becomes ONE HBM stream per shard
+    Q-pivot count+extract phase in one dispatch
     (``(x, pivots, cap) -> (counts (Q,3), below (Q,cap), above (Q,cap))``)."""
     def fn(x, pivots, cap):
-        return fused_count_extract_multi(x, pivots, cap, use_pallas=use_pallas)
+        return fused_count_extract_multi(x, pivots, cap,
+                                         use_pallas=use_pallas,
+                                         backend=backend)
     return fn

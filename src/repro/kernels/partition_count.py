@@ -6,9 +6,11 @@ bytes, so the kernel is HBM-bandwidth-bound; the job of the kernel is to
 stream HBM->VMEM in MXU-aligned (block_rows, 1024) tiles and keep the
 accumulator in SMEM across sequential grid steps.
 
-Layout contract (see ops.count3): the caller pads the flat shard to
-rows*1024 and reshapes to (rows, 1024); padding lanes are masked by global
-index against the true length (static at trace time).
+Layout contract (see kernels.dispatch): the caller pads the flat shard to
+rows*lanes and reshapes to (rows, lanes) row-major, where lanes is any
+positive multiple of 128 (1024 for 4-byte dtypes, 2048 for 2-byte —
+``dispatch.lanes_for``); padding lanes are masked by global index against
+the true length (static at trace time).
 """
 from __future__ import annotations
 
@@ -21,12 +23,41 @@ from jax.experimental.pallas import tpu as pltpu
 
 LANES = 1024          # 8 sublanes x 128 lanes, one VREG row of f32
 DEFAULT_BLOCK_ROWS = 128
+LANE_MULTIPLE = 128
+
+
+def check_lanes(lanes: int) -> None:
+    """The streamed layout's trailing dim must be VREG-aligned."""
+    if lanes <= 0 or lanes % LANE_MULTIPLE:
+        raise ValueError(f"trailing dim must be a positive multiple of "
+                         f"{LANE_MULTIPLE}, got {lanes}")
+
+
+def tpu_call_params(interpret: bool, vmem_limit) -> dict:
+    """compiler_params kwargs for a native (non-interpret) pallas_call:
+    sequential grid semantics + an explicit VMEM cap from the dispatch
+    plan.  Guarded for jax API drift (TPUCompilerParams in 0.4.x,
+    CompilerParams later); interpret mode takes none."""
+    if interpret:
+        return {}
+    cls = getattr(pltpu, "TPUCompilerParams", None)
+    if cls is None:
+        cls = getattr(pltpu, "CompilerParams", None)
+    if cls is None:
+        return {}
+    kwargs = {"dimension_semantics": ("arbitrary",)}
+    if vmem_limit:
+        kwargs["vmem_limit_bytes"] = int(vmem_limit)
+    try:
+        return {"compiler_params": cls(**kwargs)}
+    except TypeError:       # field set drifted; run with compiler defaults
+        return {}
 
 
 def _count3_kernel(pivot_ref, x_ref, out_ref, *, n_valid: int,
                    block_rows: int):
-    """One grid step: accumulate (lt, eq, gt-valid) for a (block_rows, LANES)
-    tile into the SMEM accumulator."""
+    """One grid step: accumulate (lt, eq, gt-valid) for a
+    (block_rows, lanes) tile into the SMEM accumulator."""
     step = pl.program_id(0)
 
     @pl.when(step == 0)
@@ -37,10 +68,11 @@ def _count3_kernel(pivot_ref, x_ref, out_ref, *, n_valid: int,
 
     x = x_ref[...]
     pivot = pivot_ref[0]
-    base = step * block_rows * LANES
+    lanes = x.shape[1]
+    base = step * block_rows * lanes
     row = jax.lax.broadcasted_iota(jnp.int32, x.shape, 0)
     col = jax.lax.broadcasted_iota(jnp.int32, x.shape, 1)
-    valid = (base + row * LANES + col) < n_valid
+    valid = (base + row * lanes + col) < n_valid
     lt = jnp.sum(jnp.where(valid & (x < pivot), 1, 0), dtype=jnp.int32)
     eq = jnp.sum(jnp.where(valid & (x == pivot), 1, 0), dtype=jnp.int32)
     nv = jnp.sum(jnp.where(valid, 1, 0), dtype=jnp.int32)
@@ -50,20 +82,22 @@ def _count3_kernel(pivot_ref, x_ref, out_ref, *, n_valid: int,
 
 
 @functools.partial(jax.jit, static_argnames=("n_valid", "block_rows",
-                                             "interpret"))
+                                             "interpret", "vmem_limit"))
 def partition_count(x2d: jax.Array, pivot: jax.Array, *, n_valid: int,
                     block_rows: int = DEFAULT_BLOCK_ROWS,
-                    interpret: bool = True) -> jax.Array:
+                    interpret: bool = True,
+                    vmem_limit: int = None) -> jax.Array:
     """(lt, eq, gt) int32 counts of the first ``n_valid`` elements of the
-    row-major (rows, LANES) array vs the scalar pivot.
+    row-major (rows, lanes) array vs the scalar pivot.
 
-    VMEM footprint per step: block_rows * LANES * itemsize
+    VMEM footprint per step: block_rows * lanes * itemsize
     (128 x 1024 x 4B = 512 KiB f32 — well under the ~16 MiB v5e VMEM,
-    leaving room for double-buffered prefetch of the next tile).
+    leaving room for double-buffered prefetch of the next tile; the
+    dispatch plan shrinks block_rows when residents crowd the budget and
+    passes the assumed footprint as ``vmem_limit``).
     """
     rows, lanes = x2d.shape
-    if lanes != LANES:
-        raise ValueError(f"expected trailing dim {LANES}, got {lanes}")
+    check_lanes(lanes)
     block_rows = min(block_rows, rows)
     grid = (pl.cdiv(rows, block_rows),)
     kernel = functools.partial(_count3_kernel, n_valid=n_valid,
@@ -73,9 +107,10 @@ def partition_count(x2d: jax.Array, pivot: jax.Array, *, n_valid: int,
         grid=grid,
         in_specs=[
             pl.BlockSpec(memory_space=pltpu.SMEM),
-            pl.BlockSpec((block_rows, LANES), lambda i: (i, 0)),
+            pl.BlockSpec((block_rows, lanes), lambda i: (i, 0)),
         ],
         out_specs=pl.BlockSpec(memory_space=pltpu.SMEM),
         out_shape=jax.ShapeDtypeStruct((3,), jnp.int32),
         interpret=interpret,
+        **tpu_call_params(interpret, vmem_limit),
     )(pivot.reshape(1), x2d)

@@ -21,9 +21,9 @@ of telemetry/per-channel workloads (beyond that a bin-scatter layout wins;
 see DESIGN.md §7).
 
 Layout contract matches ``fused_select``: flat shards padded to
-(rows, LANES) row-major, true length in ``n_valid``, ``cap_pad`` a positive
-multiple of 128.  Keys are int32; pad lanes are masked by n_valid so their
-key content is irrelevant.
+(rows, lanes) row-major (lanes any positive multiple of 128), true length
+in ``n_valid``, ``cap_pad`` a positive multiple of 128.  Keys are int32;
+pad lanes are masked by n_valid so their key content is irrelevant.
 """
 from __future__ import annotations
 
@@ -34,7 +34,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
-from .partition_count import LANES, DEFAULT_BLOCK_ROWS
+from .partition_count import (DEFAULT_BLOCK_ROWS, check_lanes,
+                              tpu_call_params)
 from .fused_select import _sentinels, _valid_mask, _merge_below, _merge_above
 
 
@@ -81,18 +82,17 @@ def _segmented_kernel(pivots_ref, x_ref, keys_ref, count_ref, below_ref,
 
 @functools.partial(jax.jit, static_argnames=("n_valid", "cap_pad",
                                              "block_rows", "num_groups",
-                                             "interpret"))
+                                             "interpret", "vmem_limit"))
 def segmented_select(x2d: jax.Array, keys2d: jax.Array, pivots: jax.Array, *,
                      n_valid: int, cap_pad: int, num_groups: int,
                      block_rows: int = DEFAULT_BLOCK_ROWS,
-                     interpret: bool = True):
-    """One streaming pass over the (rows, LANES) shard for every group and
+                     interpret: bool = True, vmem_limit: int = None):
+    """One streaming pass over the (rows, lanes) shard for every group and
     level: ``pivots`` is (G, Q); returns ``(counts (G, Q, 3),
     below (G, Q, cap_pad), above (G, Q, cap_pad))`` with per-row semantics
     identical to ``fused_select`` restricted to ``keys == g``."""
     rows, lanes = x2d.shape
-    if lanes != LANES:
-        raise ValueError(f"expected trailing dim {LANES}, got {lanes}")
+    check_lanes(lanes)
     if keys2d.shape != x2d.shape:
         raise ValueError(f"keys shape {keys2d.shape} != values {x2d.shape}")
     if keys2d.dtype != jnp.int32:
@@ -113,8 +113,8 @@ def segmented_select(x2d: jax.Array, keys2d: jax.Array, pivots: jax.Array, *,
         grid=grid,
         in_specs=[
             pl.BlockSpec(memory_space=pltpu.SMEM),
-            pl.BlockSpec((block_rows, LANES), lambda i: (i, 0)),
-            pl.BlockSpec((block_rows, LANES), lambda i: (i, 0)),
+            pl.BlockSpec((block_rows, lanes), lambda i: (i, 0)),
+            pl.BlockSpec((block_rows, lanes), lambda i: (i, 0)),
         ],
         out_specs=[
             pl.BlockSpec(memory_space=pltpu.SMEM),
@@ -127,6 +127,7 @@ def segmented_select(x2d: jax.Array, keys2d: jax.Array, pivots: jax.Array, *,
             jax.ShapeDtypeStruct((G * Q, cap_pad), x2d.dtype),
         ],
         interpret=interpret,
+        **tpu_call_params(interpret, vmem_limit),
     )(pivots.reshape(-1), x2d, keys2d)
     return (counts.reshape(G, Q, 3), below.reshape(G, Q, cap_pad),
             above.reshape(G, Q, cap_pad))

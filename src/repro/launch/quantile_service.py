@@ -66,16 +66,19 @@ _query_jit = jax.jit(sketch_query_rank)
 
 
 @functools.lru_cache(maxsize=None)
-def _chunk_fn(cap: int, fused: bool):
+def _chunk_fn(cap: int, fused: bool, backend=None):
     """Per-chunk count+extract with a static candidate cap: the warm query's
-    only data pass.  fused=True routes through the single-pass Pallas kernel
-    seam (one HBM stream per chunk); the kernel takes the pivot as a plain
-    operand, so externally-supplied (warm) pivots need no retrace."""
+    only data pass.  fused=True routes through the single-pass kernel seam
+    (one HBM stream per chunk on a Pallas ``backend``); the kernel takes the
+    pivot as a plain operand, so externally-supplied (warm) pivots need no
+    retrace.  ``backend`` is the dispatch handle the seam closes over
+    (hashable: None / spec string / frozen Backend — safe as an lru key)."""
     if fused:
         from repro.kernels import ops as kernel_ops
 
         def fn(x, pivot):
-            return kernel_ops.fused_count_extract(x, pivot, cap)
+            return kernel_ops.fused_count_extract(x, pivot, cap,
+                                                  backend=backend)
         return fn   # kernel wrapper dispatches (and ticks) itself
 
     def fn(x, pivot):
@@ -91,15 +94,16 @@ def _grouped_sketch_fn(num_groups: int, s: int):
 
 
 @functools.lru_cache(maxsize=None)
-def _grouped_chunk_fn(cap: int, fused: bool):
+def _grouped_chunk_fn(cap: int, fused: bool, backend=None):
     """Per-chunk segmented count+extract for all (G, Q) pivots: the grouped
-    query's only data pass — ONE HBM stream per chunk with the segmented
-    Pallas kernel (fused=True), 3*G*Q jnp streams otherwise."""
+    query's only data pass — ONE HBM stream per chunk on a Pallas
+    ``backend`` (fused=True), 3*G*Q jnp streams otherwise."""
     if fused:
         from repro.kernels import ops as kernel_ops
 
         def fn(v, k, pivots):
-            return kernel_ops.segmented_count_extract(v, k, pivots, cap)
+            return kernel_ops.segmented_count_extract(v, k, pivots, cap,
+                                                      backend=backend)
         return fn   # kernel wrapper dispatches (and ticks) itself
 
     def fn(v, k, pivots):
@@ -143,18 +147,32 @@ class QuantileService:
 
     def __init__(self, *, eps: float = 0.01, budget: Optional[int] = None,
                  dtype=jnp.float32, fused: bool = False,
-                 check_nans: bool = True):
-        """``check_nans=False`` opts out of the reject-at-ingest NaN check:
-        the check is a blocking device->host sync per batch, which a tight
-        decode loop (one ingest per token) may not afford.  Opting out
-        transfers the NaN-free contract to the caller — queries over a
-        NaN-poisoned stream are undefined (DESIGN.md §7)."""
+                 check_nans: bool = True, backend=None):
+        """Exactness guarantee: ``exact``/``grouped`` answers are
+        bit-identical to a full sort of everything ingested, for every
+        combination of the flags below — they steer data movement only.
+
+        ``fused=True`` routes the count+extract pass of each query through
+        the kernel layer (one HBM stream per chunk on a Pallas backend);
+        ``backend`` (None | "pallas" | "pallas_interpret" | "jnp" | a
+        ``kernels.dispatch.Backend``) picks the kernel implementation, with
+        None selecting per platform at trace time — compiled Pallas on TPU,
+        jitted jnp fallback on CPU (``kernels.dispatch.select_backend``).
+        Ignored without ``fused``.
+
+        NaN policy: reject at ingest (DESIGN.md §7), so queries never see a
+        NaN.  ``check_nans=False`` opts out of that check: it is a blocking
+        device->host sync per batch, which a tight decode loop (one ingest
+        per token) may not afford.  Opting out transfers the NaN-free
+        contract to the caller — queries over a NaN-poisoned stream are
+        undefined."""
         if not 0.0 < eps < 1.0:
             raise ValueError(f"eps must be in (0,1), got {eps}")
         self.eps = eps
         self.budget = int(budget) if budget else sketch_budget(eps)
         self.dtype = jnp.dtype(dtype)
         self.fused = fused
+        self.backend = backend
         self.check_nans = check_nans
         self._streams: Dict[str, _Stream] = {}
         self._grouped: Dict[str, _GroupedStream] = {}
@@ -320,7 +338,8 @@ class QuantileService:
         belows, aboves = [], []
         for v, k in zip(st.chunks, st.key_chunks):
             cap_c = min(v.shape[0], cap)
-            c, b, a = _grouped_chunk_fn(cap_c, self.fused)(v, k, pivots)
+            c, b, a = _grouped_chunk_fn(cap_c, self.fused,
+                                        self.backend)(v, k, pivots)
             counts = counts + c
             belows.append(b)
             aboves.append(a)
@@ -361,7 +380,7 @@ class QuantileService:
         counts, belows, aboves = [], [], []
         for chunk in st.chunks:
             cap_c = min(chunk.shape[0], cap)
-            c, b, a = _chunk_fn(cap_c, self.fused)(chunk, pivot)
+            c, b, a = _chunk_fn(cap_c, self.fused, self.backend)(chunk, pivot)
             counts.append(c)
             belows.append(b)
             aboves.append(a)
@@ -388,9 +407,9 @@ class StreamingCalibrator:
     no sketch-phase sort ever happens at scale-query time."""
 
     def __init__(self, q: float = 0.999, *, eps: float = 0.01,
-                 fused: bool = False):
+                 fused: bool = False, backend=None):
         self.q = q
-        self.service = QuantileService(eps=eps, fused=fused)
+        self.service = QuantileService(eps=eps, fused=fused, backend=backend)
 
     def observe(self, name: str, activations) -> None:
         acts = jnp.abs(jnp.asarray(activations).astype(jnp.float32))

@@ -14,15 +14,70 @@ global_bytes / (chips * link_bw)).
 
 Hardware constants: TPU v5e — 197 TFLOP/s bf16, 819 GB/s HBM, ~50 GB/s/link
 ICI (assignment-specified).
+
+The module also carries the KERNEL roofline helpers used by
+``benchmarks/bench_roofline.py`` (docs/PERFORMANCE.md): a per-platform peak
+HBM bandwidth table (``peak_hbm_bandwidth``, env-overridable via
+``REPRO_PEAK_BW_GBS``) and ``kernel_roofline`` which turns a measured
+(bytes_moved, seconds) pair into achieved GB/s and fraction-of-peak.  This
+file stays import-light (no jax at module scope) so the dry-run tooling can
+run anywhere; the platform probe imports jax lazily.
 """
 from __future__ import annotations
 
+import os
 import re
-from typing import Dict, Tuple
+from typing import Dict, Optional, Tuple
 
 PEAK_FLOPS = 197e12
 HBM_BW = 819e9
 LINK_BW = 50e9
+
+# Peak memory bandwidth per jax platform, bytes/s.  tpu = v5e HBM (matches
+# HBM_BW above); gpu = a modern HBM part (~H100 SXM order of magnitude);
+# cpu = a placeholder DDR figure — CPU numbers are for *relative* kernel
+# comparison only, never for frac-of-peak claims (docs/PERFORMANCE.md).
+HBM_BW_BY_PLATFORM = {
+    "tpu": HBM_BW,
+    "gpu": 1.6e12,
+    "cuda": 1.6e12,
+    "rocm": 1.6e12,
+    "cpu": 4e10,
+}
+
+
+def peak_hbm_bandwidth(platform: Optional[str] = None) -> float:
+    """Peak memory bandwidth (bytes/s) for ``platform`` (None = the default
+    jax backend's platform).  The ``REPRO_PEAK_BW_GBS`` env var (GB/s, e.g.
+    ``REPRO_PEAK_BW_GBS=2039`` for an H100 SXM) overrides the table — the
+    re-tuning knob for hardware the table doesn't know."""
+    env = os.environ.get("REPRO_PEAK_BW_GBS")
+    if env:
+        return float(env) * 1e9
+    if platform is None:
+        import jax   # lazy: keep module importable without a device runtime
+        platform = jax.default_backend()
+    return HBM_BW_BY_PLATFORM.get(platform.lower(), HBM_BW_BY_PLATFORM["cpu"])
+
+
+def kernel_roofline(bytes_moved: float, seconds: float,
+                    platform: Optional[str] = None) -> Dict:
+    """Achieved-vs-peak HBM bandwidth for one measured kernel invocation.
+
+    ``bytes_moved`` is the kernel's modelled HBM traffic (input bytes times
+    the backend-honest pass count from ``kernels.ops.hbm_passes``, plus
+    output bytes); ``seconds`` the measured wall-clock.  Returns achieved
+    GB/s, the platform peak, and the fraction of peak — the quantity
+    bench_roofline reports per (kernel, backend)."""
+    peak = peak_hbm_bandwidth(platform)
+    achieved = bytes_moved / seconds if seconds > 0 else 0.0
+    return {
+        "bytes_moved": float(bytes_moved),
+        "seconds": float(seconds),
+        "achieved_gbs": achieved / 1e9,
+        "peak_gbs": peak / 1e9,
+        "frac_of_peak": achieved / peak if peak else 0.0,
+    }
 
 _DTYPE_BYTES = {
     "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "f16": 2, "bf16": 2,

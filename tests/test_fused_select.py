@@ -197,8 +197,10 @@ class TestPassAccounting:
         x = jnp.asarray(rng.normal(size=30_000).astype(np.float32))
         pivot = x[0]
         cap = 64
+        # backend="pallas" pins the kernel contract: the dispatch default
+        # on CPU is the jnp oracle, which honestly ticks 3 streams
         ops.reset_hbm_passes()
-        ops.fused_count_extract(x, pivot, cap)
+        ops.fused_count_extract(x, pivot, cap, backend="pallas")
         assert ops.hbm_passes() == 1
         ops.reset_hbm_passes()
         ops.count3(x, pivot)
@@ -206,12 +208,23 @@ class TestPassAccounting:
         ops.extract_above(x, pivot, cap)
         assert ops.hbm_passes() == 3
 
+    def test_jnp_backend_ticks_honestly(self):
+        rng = np.random.default_rng(5)
+        x = jnp.asarray(rng.normal(size=30_000).astype(np.float32))
+        ops.reset_hbm_passes()
+        ops.fused_count_extract(x, x[0], 64, backend="jnp")
+        assert ops.hbm_passes() == 3
+        pivots = jnp.stack([x[1], x[2], x[3]])
+        ops.reset_hbm_passes()
+        ops.fused_count_extract_multi(x, pivots, 64, backend="jnp")
+        assert ops.hbm_passes() == 9
+
     def test_multi_pivot_is_one_pass(self):
         rng = np.random.default_rng(6)
         x = jnp.asarray(rng.normal(size=30_000).astype(np.float32))
         pivots = jnp.stack([x[1], x[2], x[3]])
         ops.reset_hbm_passes()
-        ops.fused_count_extract_multi(x, pivots, 64)
+        ops.fused_count_extract_multi(x, pivots, 64, backend="pallas")
         assert ops.hbm_passes() == 1
 
 

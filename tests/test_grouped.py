@@ -109,7 +109,8 @@ class TestOneFusedPassPerShard:
         keys = jnp.asarray(rng.integers(0, G, size=4096).astype(np.int32))
         pivots = jnp.asarray(rng.normal(size=(G, Q)).astype(np.float32))
         kernel_ops.reset_hbm_passes()
-        c1, b1, a1 = kernel_ops.segmented_count_extract(x, keys, pivots, 64)
+        c1, b1, a1 = kernel_ops.segmented_count_extract(x, keys, pivots, 64,
+                                                        backend="pallas")
         assert kernel_ops.hbm_passes() == 1
         kernel_ops.reset_hbm_passes()
         c2, b2, a2 = kernel_ops.segmented_count_extract(x, keys, pivots, 64,
@@ -128,7 +129,8 @@ class TestOneFusedPassPerShard:
             x = jnp.asarray(rng.normal(size=2048).astype(np.float32))
             keys = jnp.asarray(rng.integers(0, G, size=2048)
                                .astype(np.int32))
-            kernel_ops.segmented_count_extract(x, keys, pivots, 128)
+            kernel_ops.segmented_count_extract(x, keys, pivots, 128,
+                                               backend="pallas")
         assert kernel_ops.hbm_passes() == 3
 
 
@@ -244,7 +246,7 @@ class TestRaggedChannelwise:
 class TestServiceGrouped:
     def test_ragged_chunks_fused_one_pass_per_chunk(self):
         rng = np.random.default_rng(17)
-        svc = QuantileService(eps=0.01, fused=True)
+        svc = QuantileService(eps=0.01, fused=True, backend="pallas")
         G = 5
         allv, allk = [], []
         for sz in (1000, 3777, 2048, 517):

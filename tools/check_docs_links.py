@@ -1,0 +1,158 @@
+#!/usr/bin/env python
+"""Docs build check (CI): intra-repo markdown link lint + executable docs.
+
+1. Every relative link in every ``*.md`` file must resolve to a file (or
+   directory) inside the repo; ``#anchor`` fragments must match a heading
+   in the target file (GitHub slug rules).
+2. The ``python`` code blocks in docs/ARCHITECTURE.md's Quickstart section
+   are executed doctest-style (cumulatively, in one namespace) so the
+   documented API calls can never rot.
+
+Exits non-zero with one line per failure.  No dependencies beyond stdlib +
+the repo itself (the code blocks import repro, so run with PYTHONPATH=src).
+"""
+from __future__ import annotations
+
+import os
+import re
+import sys
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+SKIP_DIRS = {".git", "__pycache__", ".claude", "node_modules", ".venv"}
+
+LINK_RE = re.compile(r"(?<!!)\[[^\]]*\]\(([^)\s]+)\)")
+FENCE_RE = re.compile(r"^(```|~~~)")
+HEADING_RE = re.compile(r"^(#{1,6})\s+(.*)$")
+
+
+def md_files():
+    for root, dirs, files in os.walk(REPO):
+        dirs[:] = [d for d in dirs if d not in SKIP_DIRS]
+        for f in sorted(files):
+            if f.endswith(".md"):
+                yield os.path.join(root, f)
+
+
+def strip_fences(text: str):
+    """Yield (lineno, line) for lines outside fenced code blocks."""
+    in_fence = False
+    for i, line in enumerate(text.splitlines(), 1):
+        if FENCE_RE.match(line.strip()):
+            in_fence = not in_fence
+            continue
+        if not in_fence:
+            yield i, line
+
+
+def github_slug(heading: str) -> str:
+    """GitHub's anchor slug: lowercase, drop punctuation, spaces->hyphens."""
+    s = heading.strip().lower()
+    s = re.sub(r"[^\w\- ]", "", s)       # keeps letters/digits/_/-/space
+    return s.replace(" ", "-")
+
+
+def anchors_of(path: str) -> set:
+    seen: dict = {}
+    out = set()
+    with open(path, encoding="utf-8") as f:
+        text = f.read()
+    for _, line in strip_fences(text):
+        m = HEADING_RE.match(line)
+        if not m:
+            continue
+        slug = github_slug(m.group(2))
+        n = seen.get(slug, 0)
+        seen[slug] = n + 1
+        out.add(slug if n == 0 else f"{slug}-{n}")
+    return out
+
+
+def check_links() -> list:
+    errors = []
+    for path in md_files():
+        rel = os.path.relpath(path, REPO)
+        with open(path, encoding="utf-8") as f:
+            text = f.read()
+        for lineno, line in strip_fences(text):
+            for m in LINK_RE.finditer(line):
+                target = m.group(1)
+                if re.match(r"^[a-z][a-z0-9+.-]*:", target):   # http:, mailto:
+                    continue
+                frag = ""
+                if "#" in target:
+                    target, frag = target.split("#", 1)
+                if not target:                                  # same-file anchor
+                    dest = path
+                else:
+                    dest = os.path.normpath(
+                        os.path.join(os.path.dirname(path), target))
+                    if not dest.startswith(REPO):
+                        errors.append(f"{rel}:{lineno}: link escapes repo: "
+                                      f"{m.group(1)}")
+                        continue
+                    if not os.path.exists(dest):
+                        errors.append(f"{rel}:{lineno}: broken link: "
+                                      f"{m.group(1)}")
+                        continue
+                if frag and dest.endswith(".md"):
+                    if frag.lower() not in anchors_of(dest):
+                        errors.append(f"{rel}:{lineno}: missing anchor "
+                                      f"#{frag} in {os.path.relpath(dest, REPO)}")
+    return errors
+
+
+def quickstart_blocks(path: str) -> list:
+    """``python`` fenced blocks inside the '## Quickstart' section."""
+    blocks, cur = [], None
+    in_section = False
+    with open(path, encoding="utf-8") as f:
+        for line in f.read().splitlines():
+            h = HEADING_RE.match(line)
+            if h and len(h.group(1)) <= 2:
+                in_section = h.group(2).strip().lower() == "quickstart"
+                continue
+            if not in_section:
+                continue
+            if cur is None and line.strip().startswith("```python"):
+                cur = []
+            elif cur is not None and line.strip().startswith("```"):
+                blocks.append("\n".join(cur))
+                cur = None
+            elif cur is not None:
+                cur.append(line)
+    return blocks
+
+
+def check_quickstart() -> list:
+    path = os.path.join(REPO, "docs", "ARCHITECTURE.md")
+    if not os.path.exists(path):
+        return ["docs/ARCHITECTURE.md missing"]
+    blocks = quickstart_blocks(path)
+    if not blocks:
+        return ["docs/ARCHITECTURE.md: no python blocks in ## Quickstart"]
+    sys.path.insert(0, os.path.join(REPO, "src"))
+    ns: dict = {}
+    for i, code in enumerate(blocks, 1):
+        try:
+            exec(compile(code, f"ARCHITECTURE.md#quickstart[{i}]", "exec"), ns)
+        except Exception as e:  # noqa: BLE001 — report, keep linting
+            return [f"docs/ARCHITECTURE.md quickstart block {i} failed: "
+                    f"{type(e).__name__}: {e}"]
+    return []
+
+
+def main() -> int:
+    errors = check_links()
+    errors += check_quickstart()
+    for e in errors:
+        print(e, file=sys.stderr)
+    if errors:
+        print(f"FAILED: {len(errors)} docs error(s)", file=sys.stderr)
+        return 1
+    n = len(list(md_files()))
+    print(f"docs check OK: {n} markdown files, quickstart executed")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())
