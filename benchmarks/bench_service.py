@@ -1,4 +1,5 @@
-"""Streaming service: cold vs warm exact-query cost (DESIGN.md §6).
+"""Streaming service: cold vs warm exact-query cost, and the multi-tenant
+streams scale axis (DESIGN.md §6, §9).
 
 A stateless GK Select job pays 3 actions per query; the first — sketch
 construction — is a full sort of every chunk.  ``QuantileService`` maintains
@@ -12,6 +13,13 @@ count+extract (+resolve).  This module measures both sides of that claim:
     (``kernels.ops.hbm_passes``, asserted).
   * wall-clock — us/query cold vs warm (answers asserted bit-identical to
     the numpy oracle both ways).
+
+The streams scale axis measures the slot-table refactor: batched ingest of
+S ∈ {1e2, 1e4} streams (1e6 in full mode only) reporting ingest throughput
+(streams·values/sec) and the one-job ``exact_all`` vs per-stream-loop query
+wall time — asserting via ``launch.ingest_dispatches`` that one tick issues
+the SAME constant number of jitted device calls at every S (O(1), not
+O(S)).
 """
 import os
 import time
@@ -22,7 +30,8 @@ import jax.numpy as jnp
 
 from repro.core import reset_sketch_sorts, sketch_sorts
 from repro.kernels import ops as kernel_ops
-from repro.launch import QuantileService
+from repro.launch import (QuantileService, ingest_dispatches,
+                          reset_ingest_dispatches)
 
 
 def timed(fn, reps=3):
@@ -97,4 +106,53 @@ def run(csv_rows):
     us_approx = timed(lambda: svc.approx("bench", q))
     csv_rows.append(("service/us_ingest_batch", f"{us_ing:.0f}",
                      f"batch={n_chunk} approx_query={us_approx:.0f}us"))
+
+    # ---- streams scale axis: slot-table multi-tenant ingest/query --------
+    scales = [10 ** 2, 10 ** 4] + ([] if smoke else [10 ** 6])
+    ticks = 2
+    n_query = 32               # per-stream-loop sample (full loop at 1e6
+    #                            would measure Python, not the claim)
+    dispatches_at_scale = {}
+    for S in scales:
+        # keep the tick ring bounded: ~1e7 resident values at the top scale
+        chunk_len = 8 if S >= 10 ** 6 else (32 if smoke else 64)
+        svc_s = QuantileService(eps=0.1, budget=64)
+        names = [f"s{i}" for i in range(S)]
+        batch = rng.normal(size=(S, chunk_len)).astype(np.float32)
+        batches = list(batch)
+        svc_s.ingest_batch(names, batches)       # registration tick
+        reset_ingest_dispatches()
+        t0 = time.perf_counter()
+        for _ in range(ticks):
+            svc_s.ingest_batch(names, batches)   # steady-state ticks
+        jax.block_until_ready(svc_s._stacked.values)
+        dt = (time.perf_counter() - t0) / ticks
+        dispatches_at_scale[S] = ingest_dispatches() // ticks
+        vals_per_sec = S * chunk_len / dt
+
+        t0 = time.perf_counter()
+        all_out = svc_s.exact_all((0.5,))
+        jax.block_until_ready(list(all_out.values()))
+        us_all = (time.perf_counter() - t0) * 1e6
+        sample = names[:: max(1, S // n_query)][:n_query]
+        t0 = time.perf_counter()
+        loop_out = {m: svc_s.exact(m, 0.5) for m in sample}
+        jax.block_until_ready(list(loop_out.values()))
+        us_loop = ((time.perf_counter() - t0) * 1e6
+                   / len(sample) * S)            # extrapolated full loop
+        for m in sample:                         # one-job parity spot check
+            assert (np.asarray(all_out[m][0]).tobytes()
+                    == np.asarray(loop_out[m]).tobytes()), m
+        csv_rows.append((f"service/streams_S{S}", f"{dt * 1e6:.0f}",
+                         f"ingest={vals_per_sec:.3g}vals/s "
+                         f"dispatches={dispatches_at_scale[S]} "
+                         f"exact_all={us_all:.0f}us "
+                         f"loop~{us_loop:.0f}us "
+                         f"onejob_speedup={us_loop / max(us_all, 1e-9):.1f}x"))
+
+    # the refactor's structural claim: O(1) jitted calls per tick, not O(S)
+    counts = sorted(set(dispatches_at_scale.values()))
+    assert len(counts) == 1 and counts[0] <= 3, dispatches_at_scale
+    csv_rows.append(("service/ingest_dispatches_per_tick", str(counts[0]),
+                     f"constant over S={scales} (O(1) asserted)"))
     return csv_rows

@@ -8,7 +8,9 @@ tracked across PRs.
 
 ``REPRO_BENCH_SMOKE=1`` (or ``--smoke``) runs a ~30s subset on tiny sizes —
 the CI configuration — and writes to ``*.smoke.*`` filenames so it never
-clobbers the tracked full-run artifacts."""
+clobbers the tracked full-run artifacts.  ``--only name[,name]`` (or
+``REPRO_BENCH_ONLY``) filters to the named modules — CI uses it to run the
+service dispatch-counter assertions as their own step."""
 import csv
 import io
 import json
@@ -51,9 +53,22 @@ def main() -> None:
              or os.environ.get("REPRO_BENCH_SMOKE", "0") == "1")
     if smoke:
         os.environ["REPRO_BENCH_SMOKE"] = "1"
+    only = os.environ.get("REPRO_BENCH_ONLY", "")
+    argv = sys.argv[1:]
+    if "--only" in argv:
+        only = argv[argv.index("--only") + 1]
+    selected = SMOKE_MODULES if smoke else MODULES
+    if only:
+        wanted = {w.strip() for w in only.split(",") if w.strip()}
+        pool = dict(MODULES)
+        unknown = wanted - set(pool)
+        if unknown:
+            sys.exit(f"unknown bench module(s): {sorted(unknown)} "
+                     f"(have {sorted(pool)})")
+        selected = [(n, pool[n]) for n in sorted(wanted)]
     rows = [("name", "us_per_call", "derived")]
     failed = False
-    for name, mod in (SMOKE_MODULES if smoke else MODULES):
+    for name, mod in selected:
         print(f"== {name} ==", file=sys.stderr)
         try:
             mod.run(rows)

@@ -1,2 +1,6 @@
-from .checkpoint import (save_checkpoint, restore_checkpoint, latest_step)
-__all__ = ["save_checkpoint", "restore_checkpoint", "latest_step"]
+from .checkpoint import (save_checkpoint, restore_checkpoint,
+                         restore_checkpoint_flat, latest_step,
+                         save_service_snapshot, restore_service_snapshot)
+__all__ = ["save_checkpoint", "restore_checkpoint",
+           "restore_checkpoint_flat", "latest_step",
+           "save_service_snapshot", "restore_service_snapshot"]

@@ -11,6 +11,13 @@ assumptions.
 The manifest also stores the data-pipeline cursor and framework metadata so
 restart is exact (same batches, same quantile-clip thresholds — the paper's
 reproducibility argument end-to-end).
+
+Service snapshots (DESIGN.md §9): ``save_service_snapshot`` /
+``restore_service_snapshot`` persist a ``QuantileService``'s stacked sketch
+table + tick ring through the same atomic ``step_<N>`` layout (flat leaf
+list + JSON metadata, rebuilt templateless via ``restore_checkpoint_flat``),
+so a restarted — or preempted-and-resumed — service answers warm ``exact()``
+queries bit-identically with zero history replay.
 """
 from __future__ import annotations
 
@@ -111,3 +118,51 @@ def restore_checkpoint(directory: str, template: Any, step: Optional[int] = None
         loaded.append(jax.device_put(arr, shd) if shd is not None
                       else jax.numpy.asarray(arr))
     return treedef.unflatten(loaded), manifest["extra"]
+
+
+def restore_checkpoint_flat(directory: str,
+                            step: Optional[int] = None) -> Tuple[list, Dict]:
+    """Templateless restore for flat-list trees: the manifest's saved
+    shapes/dtypes ARE the template, so callers that checkpoint a plain list
+    of leaves (service snapshots) need no structural stand-in.  Returns
+    ``(leaves, extra)`` with each leaf at its saved dtype."""
+    step = latest_step(directory) if step is None else step
+    if step is None:
+        raise FileNotFoundError(f"no checkpoints under {directory}")
+    path = os.path.join(directory, f"step_{step:010d}")
+    with open(os.path.join(path, "manifest.json")) as f:
+        manifest = json.load(f)
+    leaves = []
+    for i, dtype in enumerate(manifest["dtypes"]):
+        arr = np.load(os.path.join(path, f"leaf_{i}.npy"))
+        if dtype == "bfloat16":
+            arr = arr.view(jax.numpy.bfloat16.dtype)
+        leaves.append(jax.numpy.asarray(arr))
+    return leaves, manifest["extra"]
+
+
+def save_service_snapshot(directory: str, step: int, service,
+                          keep: int = 3) -> str:
+    """Persist a ``QuantileService`` (stacked sketch table + tick ring +
+    registry) as an atomic ``step_<N>`` checkpoint.  Shares the ``step_``
+    namespace with model checkpoints — point it at its own subdirectory to
+    keep retention schedules independent."""
+    leaves, extra = service.snapshot()
+    return save_checkpoint(directory, step, leaves,
+                           extra={"service_snapshot": extra}, keep=keep)
+
+
+def restore_service_snapshot(directory: str, step: Optional[int] = None,
+                             **overrides):
+    """Rebuild a ``QuantileService`` from ``save_service_snapshot`` output.
+    ``overrides`` (``fused=``/``backend=``) re-target execution flags —
+    answers are exactness-invariant, so the restored service's warm
+    ``exact()`` is bit-identical to the never-restarted one with zero
+    history replay."""
+    # lazy import: checkpoint sits below launch in the layering
+    from repro.launch.quantile_service import QuantileService
+    leaves, extra = restore_checkpoint_flat(directory, step)
+    if "service_snapshot" not in extra:
+        raise ValueError(f"step under {directory} is not a service snapshot")
+    return QuantileService.from_snapshot(leaves, extra["service_snapshot"],
+                                         **overrides)

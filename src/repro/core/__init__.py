@@ -17,6 +17,10 @@ from .sketch import (GKSketch, merge_fold_left, merge_tree,
                      sample_sketch_params,
                      SketchState, sketch_budget, sketch_init, sketch_update,
                      sketch_merge, sketch_query_rank, sketch_rank_bound,
+                     sketch_update_padded, sketch_update_batch,
+                     sketch_merge_batch, sketch_stack, sketch_unstack,
+                     sketch_init_stack, sketch_query_rank_batch,
+                     sketch_rank_bound_batch,
                      reset_sketch_sorts, sketch_sorts, record_sketch_sort)
 from .select import (exact_quantile, exact_quantile_rank, gk_select,
                      gk_select_multi)
@@ -37,6 +41,9 @@ __all__ = [
     "query_merged_sketch", "sample_sketch_params",
     "SketchState", "sketch_budget", "sketch_init", "sketch_update",
     "sketch_merge", "sketch_query_rank", "sketch_rank_bound",
+    "sketch_update_padded", "sketch_update_batch", "sketch_merge_batch",
+    "sketch_stack", "sketch_unstack", "sketch_init_stack",
+    "sketch_query_rank_batch", "sketch_rank_bound_batch",
     "reset_sketch_sorts", "sketch_sorts", "record_sketch_sort",
     "exact_quantile", "exact_quantile_rank", "gk_select", "gk_select_multi",
     "full_sort_quantile", "psrs_sort", "afs_select", "jeffers_select",

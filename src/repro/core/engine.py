@@ -234,7 +234,10 @@ def phase_reduce(below: jax.Array, above: jax.Array, *, axis: str,
 def phase_resolve(pivots: jax.Array, ks: jax.Array, counts: jax.Array,
                   below: jax.Array, above: jax.Array, cap: int) -> jax.Array:
     """Final rank arithmetic (paper Steps 5+9), vmapped over the Q levels;
-    purely local — every shard already holds the reduced buffers."""
+    purely local — every shard already holds the reduced buffers.  Also the
+    single resolve seam above the engine: the streaming service's segmented
+    queries (``grouped``/``exact_all``) flatten their (G, Q) matrices onto
+    this same call, so one implementation owns the rank→value step."""
     def one(pivot, k, c, b, a):
         return local_ops.resolve(pivot, k, c[0], c[1], b, a, cap)
     return jax.vmap(one)(pivots, ks, counts, below, above)

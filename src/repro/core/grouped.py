@@ -187,25 +187,42 @@ def gk_select_grouped_sharded(v_local: jax.Array, k_local: jax.Array, *,
                               qs: Sequence[float], num_groups: int,
                               eps: float, axis: str, num_shards: int,
                               reduce_strategy: str = "tree",
-                              segmented_fn=None, ks=None) -> jax.Array:
+                              segmented_fn=None, ks=None,
+                              pivots=None, cap: int = None) -> jax.Array:
     """Exact quantiles at every level in ``qs`` for ALL ``num_groups`` group
     ids from ONE sharded job.  Returns the (G, Q) values, replicated.
 
     The candidate cap is the engine-wide ``candidate_cap`` — the segmented
     sketch's per-group pivot rank error is bounded by eps*n + 1 (see
     ``grouped_sketch_samples``), so one static cap serves every group.
+
+    ``pivots`` (a (G, Q) matrix) supplies externally-computed pivots — the
+    WARM path, mirroring ``engine.gk_select_multi_sharded``: a stacked
+    ``SketchState`` table already knows rank-accurate per-group pivots, so
+    phase 1 (the only phase that sorts the shard) is skipped and the job
+    runs in 2 of the paper's 3 actions.  Warm callers must pass ``ks`` (the
+    (G, Q) target ranks — group counts are caller-side registry state) and
+    should size ``cap`` from their tracked rank bound.
     """
     n_local = v_local.shape[0]
     n = n_local * num_shards
     G, Q = num_groups, len(qs)
-    s = grouped_sketch_samples(eps, n_local)
 
-    g_vals, g_wts, n_g, slack = phase_grouped_sketch(
-        v_local, k_local, axis=axis, num_groups=G, s=s)
-    kmat = grouped_target_ranks(n_g, qs, ks)
-    pivots = query_grouped_sketch(g_vals, g_wts, slack, kmat)
+    if pivots is not None:
+        # warm: pivots + ranks come from live caller state — skip phase 1
+        if ks is None:
+            raise ValueError("warm grouped path needs ks alongside pivots")
+        kmat = grouped_target_ranks(jnp.zeros((G,), jnp.int32), qs, ks)
+        pivots = jnp.asarray(pivots).reshape(G, Q)
+    else:
+        s = grouped_sketch_samples(eps, n_local)
+        g_vals, g_wts, n_g, slack = phase_grouped_sketch(
+            v_local, k_local, axis=axis, num_groups=G, s=s)
+        kmat = grouped_target_ranks(n_g, qs, ks)
+        pivots = query_grouped_sketch(g_vals, g_wts, slack, kmat)
 
-    cap = local_ops.candidate_cap(n, eps, n_local)
+    cap = cap if cap is not None else local_ops.candidate_cap(n, eps,
+                                                              n_local)
     counts, below, above = phase_grouped_count_extract(
         v_local, k_local, pivots, cap, axis=axis, segmented_fn=segmented_fn)
 
@@ -223,15 +240,18 @@ def distributed_quantile_grouped(values: jax.Array, keys: jax.Array,
                                  eps: float = 0.01,
                                  reduce_strategy: str = "tree",
                                  fused: bool = False, backend=None, ks=None,
-                                 check_nans: bool = True) -> jax.Array:
+                                 check_nans: bool = True,
+                                 pivots=None, cap: int = None) -> jax.Array:
     """Exact per-group quantiles over a mesh: ``values`` and ``keys`` are
     flat arrays sharded over ``axis``; returns the (num_groups, len(qs))
     exact values, replicated — every (group, level) cell bit-identical to
     the per-group sort oracle.  ``fused=True`` injects the segmented
     count+extract seam (on a Pallas ``backend``: one HBM stream per shard
     for all G*Q pivots; ``backend=None`` selects per platform — see
-    ``distributed_quantile``).  NaN policy: reject; ``check_nans=False``
-    opts out (see ``distributed_quantile``)."""
+    ``distributed_quantile``).  ``pivots``/``cap`` (with ``ks``) run the
+    WARM 2-action job from caller-held per-group pivots — see
+    ``gk_select_grouped_sharded``.  NaN policy: reject;
+    ``check_nans=False`` opts out (see ``distributed_quantile``)."""
     num_shards = mesh.shape[axis]
     qs = tuple(float(q) for q in qs)
     if not qs:
@@ -255,7 +275,8 @@ def distributed_quantile_grouped(values: jax.Array, keys: jax.Array,
                              num_groups=num_groups, eps=eps, axis=axis,
                              num_shards=num_shards,
                              reduce_strategy=reduce_strategy,
-                             segmented_fn=segmented_fn, ks=ks)
+                             segmented_fn=segmented_fn, ks=ks,
+                             pivots=pivots, cap=cap)
     fn = engine.shard_map_compat(body, mesh=mesh,
                                  in_specs=(P(axis), P(axis)), out_specs=P())
     return fn(values, keys.astype(jnp.int32))

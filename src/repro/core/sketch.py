@@ -251,6 +251,122 @@ def sketch_update(state: SketchState, batch: jax.Array) -> SketchState:
     return SketchState(values=v, weights=w, n=n_new, slack=new_slack)
 
 
+def _batch_run_padded(batch: jax.Array, n_valid, budget: int):
+    """``_batch_run`` with a TRACED valid count: lanes ``>= n_valid`` must
+    hold the dtype's high sentinel (they sort last and receive weight 0).
+
+    Emits a fixed ``budget`` lanes instead of the static ``min(n_b, budget)``
+    so every stream of a stacked batch shares one shape.  The extra lanes
+    duplicate the last valid sample with weight 0, which ``_compress``'s
+    first-to-reach-target selection provably never picks — the compressed
+    result is bit-identical to the static ``_batch_run`` path for the same
+    valid prefix (pinned by tests/test_service_stacked.py).
+    """
+    xs = jnp.sort(batch)
+    nv = jnp.asarray(n_valid, jnp.int32)
+    m_b = jnp.maximum(jnp.int32(1), -(-nv // jnp.int32(budget)))
+    t = jnp.arange(1, budget + 1, dtype=jnp.int32)
+    r = jnp.minimum(t * m_b, nv)
+    idx = jnp.clip(jnp.maximum(r, 1) - 1, 0, batch.shape[0] - 1)
+    vals = xs[idx]
+    wts = jnp.diff(r, prepend=jnp.int32(0))
+    return vals, wts, m_b
+
+
+def sketch_update_padded(state: SketchState, batch: jax.Array,
+                         n_valid) -> SketchState:
+    """``sketch_update`` for a sentinel-padded batch with a traced valid
+    count — the vmap-compatible form batched multi-tenant ingest runs on.
+
+    ``batch`` lanes at index ``>= n_valid`` must carry the dtype's high
+    sentinel.  For ``n_valid == batch.size`` the result is bit-identical to
+    ``sketch_update``; for ``n_valid == 0`` the state is returned unchanged.
+    All shapes are static (budget + padded length fix the trace), so
+    ``jax.vmap`` lifts this directly to a stacked ``SketchState``.
+    """
+    budget = state.values.shape[0]
+    batch = batch.reshape(-1).astype(state.values.dtype)
+    nv = jnp.asarray(n_valid, jnp.int32)
+    b_vals, b_wts, m_b = _batch_run_padded(batch, nv, budget)
+
+    v = jnp.concatenate([state.values, b_vals])
+    w = jnp.concatenate([state.weights, b_wts])
+    order = jnp.argsort(v, stable=True)
+    v, w = v[order], w[order]
+
+    n_new = state.n + nv
+    v, w = _compress(v, w, n_new, budget)
+
+    gap = jnp.max(state.weights)
+    new_slack = jnp.where(
+        state.n > 0,
+        jnp.maximum(state.slack + (m_b - 1), gap),
+        m_b - 1)
+    new = SketchState(values=v, weights=w, n=n_new, slack=new_slack)
+    # empty batch: the update above would re-compress (a no-op numerically,
+    # but lane layout could shift) — return the state bit-unchanged instead
+    return jax.tree.map(lambda a, b_: jnp.where(nv > 0, a, b_), new, state)
+
+
+def sketch_update_batch(states: SketchState, batches: jax.Array,
+                        n_valid: jax.Array) -> SketchState:
+    """Advance S streams in ONE traced op: ``states`` is a stacked
+    ``SketchState`` (leading axis S on every leaf), ``batches`` an (S, L)
+    sentinel-padded matrix, ``n_valid`` the (S,) true lengths.  Row i is
+    bit-identical to ``sketch_update(states[i], batches[i, :n_valid[i]])``.
+    This is the storage-model core of multi-tenant ingest: one device
+    dispatch per tick regardless of S (DESIGN.md §9)."""
+    return jax.vmap(sketch_update_padded)(states, batches, n_valid)
+
+
+def sketch_merge_batch(a: SketchState, b: SketchState) -> SketchState:
+    """Row-wise ``sketch_merge`` of two stacked summaries (same leading axis
+    and budget) — the one-call fold of a worker-local slot table into the
+    shared one (Quancurrent-style merge; DESIGN.md §9)."""
+    if a.values.shape != b.values.shape:
+        raise ValueError(f"stacked sketch shapes differ: {a.values.shape} "
+                         f"vs {b.values.shape}")
+    return jax.vmap(sketch_merge)(a, b)
+
+
+def sketch_stack(states) -> SketchState:
+    """Stack per-stream ``SketchState``s into one slot-table pytree (leading
+    axis = len(states) on every leaf).  All inputs must share one budget."""
+    states = list(states)
+    if not states:
+        raise ValueError("need at least one SketchState to stack")
+    return jax.tree.map(lambda *xs: jnp.stack(xs), *states)
+
+
+def sketch_unstack(stacked: SketchState):
+    """Split a stacked ``SketchState`` back into per-stream states."""
+    count = stacked.values.shape[0]
+    return [jax.tree.map(lambda a: a[i], stacked) for i in range(count)]
+
+
+def sketch_init_stack(count: int, budget: int, dtype=jnp.float32) -> SketchState:
+    """``count`` empty stream summaries as one stacked pytree."""
+    one = sketch_init(budget, dtype)
+    return jax.tree.map(
+        lambda a: jnp.broadcast_to(a, (count,) + a.shape), one)
+
+
+def sketch_query_rank_batch(stacked: SketchState, ks: jax.Array) -> jax.Array:
+    """Per-stream rank queries over a stacked summary: ``ks`` is (S, Q)
+    target ranks; returns the (S, Q) pivot values — one traced op for the
+    whole slot table (the warm multi-tenant pivot source)."""
+    ks = jnp.asarray(ks, jnp.int32)
+    return jax.vmap(lambda st, kvec: jax.vmap(
+        lambda k: sketch_query_rank(st, k))(kvec))(stacked, ks)
+
+
+def sketch_rank_bound_batch(stacked: SketchState) -> jax.Array:
+    """(S,) tracked per-stream query rank-error bounds (``sketch_rank_bound``
+    row-wise)."""
+    return (stacked.slack // 2 + jnp.max(stacked.weights, axis=-1)
+            + jnp.int32(2))
+
+
 def sketch_merge(a: SketchState, b: SketchState) -> SketchState:
     """Merge two stream summaries (mergeable-summaries property): concat the
     sorted runs, re-compress to a's budget.  Each side's samples can miss at

@@ -6,8 +6,12 @@ launcher wires them to SIGTERM, the coordination service and the scheduler;
 here they are unit-tested state machines the training loop already calls.
 
 Straggler detection is itself a use of the paper: per-step durations stream
-into a GK sketch and a host is flagged when it exceeds the p99 step time by a
-margin — quantile monitoring with bounded memory, no full history kept.
+into a service-owned quantile stream and a host is flagged when it exceeds
+the exact p99 step time by a margin — quantile monitoring with bounded
+sketch memory, answered by a warm 2-action query (no per-decision sort).
+The service stream also makes the monitor preemption-durable: its state
+rides the service snapshot (``checkpoint.save_service_snapshot``), so a
+restored job resumes flagging from the same duration distribution.
 """
 from __future__ import annotations
 
@@ -18,8 +22,6 @@ import time
 from typing import Callable, Dict, List, Optional, Tuple
 
 import numpy as np
-
-from repro.core.sketch import GKSketch
 
 
 class PreemptionHandler:
@@ -43,26 +45,40 @@ class StragglerMonitor:
     """Quantile-based straggler detection over per-host step durations.
 
     A host is a straggler when its step time exceeds
-    ``factor * p(quantile)`` of the global duration distribution (held in a
-    GK sketch, O(1/eps log eps*n) memory).  ``decide`` returns hosts to
-    flag; the training loop's response is deterministic batch skipping or
-    rescale via ``ElasticPlan``.
+    ``factor * p(quantile)`` of the global duration distribution.  The
+    distribution lives in a stream (``"step_durations"``) on a
+    ``QuantileService`` — by default a private one, or pass ``service=`` to
+    co-tenant the monitor on the job's shared service so its state is
+    captured by ``checkpoint.save_service_snapshot`` and survives the
+    preemption path.  ``decide`` answers with the service's EXACT warm
+    quantile (no sketch-phase sort, no full history scan) and is
+    non-mutating — an unfed monitor never creates the stream.  The
+    training loop's response is deterministic batch skipping or rescale
+    via ``ElasticPlan``.
     """
 
+    STREAM = "step_durations"
+
     def __init__(self, quantile: float = 0.99, factor: float = 2.0,
-                 eps: float = 0.01, min_samples: int = 64):
-        self.sketch = GKSketch(eps, head_size=1024, compress_threshold=512)
+                 eps: float = 0.01, min_samples: int = 64, service=None):
+        # lazy import: distributed must not pull the launch layer eagerly
+        from repro.launch.quantile_service import QuantileService
+        self.service = service if service is not None \
+            else QuantileService(eps=eps)
         self.quantile = quantile
         self.factor = factor
         self.min_samples = min_samples
 
     def record(self, durations: Dict[str, float]) -> None:
-        self.sketch.insert_batch(np.asarray(list(durations.values())))
+        self.service.ingest(
+            self.STREAM,
+            np.asarray(list(durations.values()), dtype=np.float32))
 
     def decide(self, durations: Dict[str, float]) -> List[str]:
-        if self.sketch.n + len(self.sketch._buf) < self.min_samples:
+        if self.service.stream_count(self.STREAM) < self.min_samples:
             return []
-        thr = self.factor * self.sketch.query(self.quantile)
+        thr = self.factor * float(self.service.exact(self.STREAM,
+                                                     self.quantile))
         return [h for h, d in durations.items() if d > thr]
 
 

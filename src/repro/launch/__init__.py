@@ -1,6 +1,10 @@
 """Launch layer: production meshes, sharding rules, step builders, dry-run,
 roofline analysis, train/serve drivers, and the streaming quantile service
 (``quantile_service.QuantileService`` / ``StreamingCalibrator``)."""
-from .quantile_service import QuantileService, StreamingCalibrator
+from .quantile_service import (QuantileService, StreamingCalibrator,
+                               ingest_dispatches, record_ingest_dispatch,
+                               reset_ingest_dispatches)
 
-__all__ = ["QuantileService", "StreamingCalibrator"]
+__all__ = ["QuantileService", "StreamingCalibrator",
+           "ingest_dispatches", "record_ingest_dispatch",
+           "reset_ingest_dispatches"]

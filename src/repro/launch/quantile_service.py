@@ -1,34 +1,55 @@
-"""QuantileService: streaming quantile queries over live data streams.
+"""QuantileService: vectorized multi-tenant streaming quantile queries.
 
 The paper's headline is that GK Select answers an exact quantile in a
 constant number of actions; its most expensive action is sketch
 construction — a full per-shard sort.  A query-per-job system pays that
-sort on EVERY query.  This service keeps, per stream (DESIGN.md §6):
+sort on EVERY query.  This service keeps that cost amortized AND scales to
+many tenants at once (DESIGN.md §6, §9): tenant sketches live in a single
+**slot table** of stacked ``SketchState`` pytrees — one device array per
+leaf with a leading stream axis — so one ingest tick advances every
+touched stream with a constant number of jitted device calls
+(``sketch_update_batch`` under vmap), not one dispatch per stream.
 
-  * a persistent device-resident ``SketchState`` — updated incrementally as
-    batches arrive (``core.sketch.sketch_update``: sort the batch, tile-
-    merge, re-compress to the static budget), and
-  * the raw batches themselves (device arrays), the population that exact
-    queries count/extract over.
+Storage model (DESIGN.md §9):
 
-Queries then come in two costs:
+  * ``_stacked`` — a ``SketchState`` whose leaves carry a leading capacity
+    axis ``(S, ...)``; a name→slot registry maps stream names to rows, and
+    capacity doubles when the registry outgrows the table.
+  * a **tick ring** of ``_TickRecord``s — each batched ingest stores one
+    sentinel-padded ``(S_tick, L)`` matrix plus the slot row each row fed;
+    per-stream chunks are sliced lazily at query time, so the raw
+    population for exact queries is kept without per-stream Python lists.
 
-  ``approx(q)``  O(s) from the sketch alone — no data pass at all.
-  ``exact(q)``   WARM GK Select: the pivot comes from the live sketch, so
-                 the sketch phase — and its full-data sort — is skipped;
-                 only count+extract (one streaming pass per chunk, fused to
-                 a single HBM stream with ``fused=True``) and resolve run.
-                 3 actions -> 2 for every query after the data arrived.
+Queries then come in three costs:
 
-Exactness is unconditional: the candidate cap is sized from the sketch's
+  ``approx(q)``    O(s) from the stream's sketch row — no data pass.
+  ``exact(q)``     WARM GK Select: pivot from the live sketch row, so the
+                   sketch phase — and its full-data sort — is skipped;
+                   only count+extract (one streaming pass per chunk, fused
+                   to a single HBM stream with ``fused=True``) and resolve
+                   run.  3 actions -> 2 for every query after ingest.
+  ``exact_all(qs)``ALL tenants × all levels in ONE fused job through the
+                   grouped engine: G·Q pivots from the stacked table in
+                   one call, one segmented count+extract pass per tick
+                   record (one HBM stream each with ``fused=True``).
+
+Exactness is unconditional: candidate caps are sized from the sketch's
 *tracked* rank bound (``sketch_rank_bound``), and if a pathological stream
-ever pushes the realized rank gap past the cap the service retries with the
-exact gap — so ``exact`` is always bit-identical to the cold path (which is
-bit-identical to a full sort).
+ever pushes the realized rank gap past the cap the service retries with
+the exact gap — so ``exact``/``exact_all`` are always bit-identical to the
+cold path (which is bit-identical to a full sort).
 
-This is the single-process face of the engine (chunks play the role of
-shards, exactly like ``core.select``); the sharded warm path is
-``distributed_quantile_multi(..., pivots=..., cap=...)``.
+Quancurrent-style concurrency (PAPERS.md): workers ingest into private
+``QuantileService`` local buffers and periodically ``fold`` them into the
+shared service — one batched ``sketch_merge_batch`` dispatch per fold,
+slack composing by max — so the hot ingest path never contends on the
+shared table.
+
+Snapshot/restore: ``snapshot()`` captures the stacked table + tick ring +
+registry as a flat leaf list plus JSON-able metadata (the format
+``checkpoint.save_service_snapshot`` persists); ``from_snapshot`` rebuilds
+a service whose warm ``exact()`` answers are bit-identical with zero
+history replay.
 
 Grouped streams (DESIGN.md §7): ``ingest_grouped(name, values, keys)``
 buffers keyed batches and ``grouped(name, qs, num_groups)`` answers the
@@ -41,20 +62,44 @@ from __future__ import annotations
 import dataclasses
 import functools
 import math
-from typing import Dict, List, Optional
+from typing import Dict, List, Optional, Sequence
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import local_ops
+from repro.core import engine, local_ops
 from repro.core.sketch import (SketchState, record_sketch_sort, sketch_budget,
-                               sketch_init, sketch_query_rank,
-                               sketch_rank_bound, sketch_update)
+                               sketch_init, sketch_init_stack,
+                               sketch_merge_batch, sketch_query_rank,
+                               sketch_query_rank_batch, sketch_rank_bound,
+                               sketch_rank_bound_batch, sketch_update,
+                               sketch_update_batch)
 
 
 def _round_up(x: int, multiple: int) -> int:
     return -(-x // multiple) * multiple
+
+
+# --- ingest dispatch counter ------------------------------------------------
+# Structural proof obligation for the slot-table refactor: one ingest tick
+# must issue a CONSTANT number of jitted device calls regardless of how many
+# streams it touches (the dict-of-streams design issued O(S)).  Every device
+# dispatch on the ingest path ticks this; bench_service asserts the count is
+# identical at S=100 and S=10^4.
+_INGEST_DISPATCHES = {"count": 0}
+
+
+def reset_ingest_dispatches() -> None:
+    _INGEST_DISPATCHES["count"] = 0
+
+
+def ingest_dispatches() -> int:
+    return _INGEST_DISPATCHES["count"]
+
+
+def record_ingest_dispatch(n: int = 1) -> None:
+    _INGEST_DISPATCHES["count"] += n
 
 
 # Jitted phase kernels live at module level (not on the service instance):
@@ -63,6 +108,75 @@ def _round_up(x: int, multiple: int) -> int:
 # handles per-batch-shape specialization.
 _update_jit = jax.jit(sketch_update)
 _query_jit = jax.jit(sketch_query_rank)
+_query_batch_jit = jax.jit(sketch_query_rank_batch)
+_bound_batch_jit = jax.jit(sketch_rank_bound_batch)
+
+
+@jax.jit
+def _update_rows(stacked: SketchState, slots, matrix, n_valid) -> SketchState:
+    """ONE dispatch that advances every touched slot: gather the slot rows,
+    run the vmapped masked update, scatter the rows back."""
+    rows = jax.tree.map(lambda a: a[slots], stacked)
+    upd = sketch_update_batch(rows, matrix, n_valid)
+    return jax.tree.map(lambda a, r: a.at[slots].set(r), stacked, upd)
+
+
+@jax.jit
+def _merge_rows(mine: SketchState, my_slots, theirs: SketchState,
+                their_slots) -> SketchState:
+    """ONE dispatch that folds a worker buffer's slot rows into ours."""
+    a = jax.tree.map(lambda x: x[my_slots], mine)
+    b = jax.tree.map(lambda x: x[their_slots], theirs)
+    merged = sketch_merge_batch(a, b)
+    return jax.tree.map(lambda x, r: x.at[my_slots].set(r), mine, merged)
+
+
+@jax.jit
+def _reset_rows(stacked: SketchState, slots) -> SketchState:
+    """Re-initialize recycled slots (rows freed by ``drop_stream``)."""
+    budget = stacked.values.shape[1]
+    fresh = sketch_init_stack(slots.shape[0], budget,
+                              stacked.values.dtype)
+    return jax.tree.map(lambda a, f: a.at[slots].set(f), stacked, fresh)
+
+
+# Transforms a batched ingest may apply on device before padding — keyed by
+# name so the packing jit cache stays hashable.  "abs_f32" is the
+# StreamingCalibrator's |activation| in f32.
+_TRANSFORMS = {
+    "abs_f32": lambda a: jnp.abs(a.astype(jnp.float32)),
+}
+
+
+@functools.lru_cache(maxsize=None)
+def _pack_fn(length: int, dtype_str: str, transform: Optional[str]):
+    """Device-side pack: flatten/transform each array, pad to ``length``
+    with the dtype's high sentinel, stack to one (S, L) matrix — ONE
+    dispatch for arbitrarily many device-resident inputs."""
+    tf = _TRANSFORMS[transform] if transform else None
+    dtype = jnp.dtype(dtype_str)
+    _, hi = local_ops._sentinels(dtype)
+
+    def fn(*arrays):
+        rows = []
+        for a in arrays:
+            a = jnp.asarray(a).reshape(-1)
+            if tf is not None:
+                a = tf(a)
+            a = a.astype(dtype)
+            pad = length - a.shape[0]
+            if pad:
+                a = jnp.concatenate([a, jnp.full((pad,), hi, dtype)])
+            rows.append(a)
+        return jnp.stack(rows)
+    return jax.jit(fn)
+
+
+def _high_sentinel_np(dtype):
+    """Host-side high sentinel matching ``local_ops._sentinels``."""
+    if jnp.issubdtype(dtype, jnp.floating):
+        return dtype.type(np.inf)
+    return np.iinfo(dtype).max
 
 
 @functools.lru_cache(maxsize=None)
@@ -112,6 +226,37 @@ def _grouped_chunk_fn(cap: int, fused: bool, backend=None):
 
 
 @functools.lru_cache(maxsize=None)
+def _row_chunk_fn(cap: int):
+    """Row-aligned count+extract for a tick record: every row of the
+    (S, L) matrix belongs to exactly ONE stream, so it only meets its own
+    Q pivots — O(S*L*Q) work in one dispatch, where the flat segmented
+    fallback would pay O(S*L * G*Q).  Pad lanes are masked by ``n_valid``.
+    Returns ``(counts (S, Q, 3), below (S, Q, cap), above (S, Q, cap))``
+    with ``fused_count_extract`` sentinel semantics."""
+    @jax.jit
+    def fn(data, row_pivots, n_valid):
+        lo, hi = local_ops._sentinels(data.dtype)
+        lane = jnp.arange(data.shape[1])
+
+        def per_row(row, pv, nv):
+            valid = lane < nv
+
+            def per_pivot(p):
+                is_lt = valid & (row < p)
+                is_gt = valid & (row > p)
+                counts = jnp.stack([
+                    jnp.sum(is_lt, dtype=jnp.int32),
+                    jnp.sum(valid & (row == p), dtype=jnp.int32),
+                    jnp.sum(is_gt, dtype=jnp.int32)])
+                below = jax.lax.top_k(jnp.where(is_lt, row, lo), cap)[0]
+                above = -jax.lax.top_k(-jnp.where(is_gt, row, hi), cap)[0]
+                return counts, below, above
+            return jax.vmap(per_pivot)(pv)
+        return jax.vmap(per_row)(data, row_pivots, n_valid)
+    return fn
+
+
+@functools.lru_cache(maxsize=None)
 def _resolve_fn(cap: int):
     def fn(pivot, k, counts, belows, aboves):
         lt = sum(c[0] for c in counts)
@@ -124,7 +269,20 @@ def _resolve_fn(cap: int):
 
 
 @dataclasses.dataclass
-class _Stream:
+class _TickRecord:
+    """One batched ingest tick: a sentinel-padded (S_tick, L) value matrix
+    plus, per row, the slot it fed (-1 after that stream is dropped) and
+    the count of valid leading lanes.  Rows are sliced lazily at query
+    time — the ring IS the buffered population of every stream."""
+    data: jax.Array           # (S_tick, L) device matrix, sentinel-padded
+    slots: np.ndarray         # (S_tick,) int32 slot ids, -1 = dropped
+    n_valid: np.ndarray       # (S_tick,) int32 valid lanes per row
+
+
+@dataclasses.dataclass
+class _StreamView:
+    """Read-only view of one tenant: its sketch row, its buffered chunks
+    (lazily sliced from the tick ring), and its count."""
     state: SketchState
     chunks: List[jax.Array]
     n: int
@@ -138,18 +296,21 @@ class _GroupedStream:
 
 
 class QuantileService:
-    """Owns a live ``SketchState`` + buffered chunks per named stream.
+    """Slot table of stacked tenant sketches + a tick ring of raw batches.
 
-    All device work goes through shape-keyed jitted kernels, so a stream fed
-    by fixed-size batches (the serving case: one activation batch per decode
-    step) traces each phase once and replays it for the stream's lifetime.
+    All device work goes through shape-keyed jitted kernels, so streams fed
+    by fixed-size batches (the serving case: one activation batch per
+    decode step) trace each phase once and replay it for the service's
+    lifetime.  A batched ingest tick touching 10^4 streams issues the same
+    constant number of device calls as one touching a single stream
+    (``ingest_dispatches`` counts them; bench_service asserts O(1)).
     """
 
     def __init__(self, *, eps: float = 0.01, budget: Optional[int] = None,
                  dtype=jnp.float32, fused: bool = False,
                  check_nans: bool = True, backend=None):
-        """Exactness guarantee: ``exact``/``grouped`` answers are
-        bit-identical to a full sort of everything ingested, for every
+        """Exactness guarantee: ``exact``/``exact_all``/``grouped`` answers
+        are bit-identical to a full sort of everything ingested, for every
         combination of the flags below — they steer data movement only.
 
         ``fused=True`` routes the count+extract pass of each query through
@@ -162,7 +323,7 @@ class QuantileService:
 
         NaN policy: reject at ingest (DESIGN.md §7), so queries never see a
         NaN.  ``check_nans=False`` opts out of that check: it is a blocking
-        device->host sync per batch, which a tight decode loop (one ingest
+        device->host sync per tick, which a tight decode loop (one ingest
         per token) may not afford.  Opting out transfers the NaN-free
         contract to the caller — queries over a NaN-poisoned stream are
         undefined."""
@@ -174,55 +335,193 @@ class QuantileService:
         self.fused = fused
         self.backend = backend
         self.check_nans = check_nans
-        self._streams: Dict[str, _Stream] = {}
+        # --- slot table ---------------------------------------------------
+        self._stacked: Optional[SketchState] = None   # leaves (capacity, ...)
+        self._names: Dict[str, int] = {}              # name -> slot
+        self._free: List[int] = []                    # unassigned slots
+        self._dirty: set = set()                      # freed, needs re-init
+        self._counts: List[int] = []                  # per-slot value count
+        self._capacity: int = 0
+        self._ring: List[_TickRecord] = []
         self._grouped: Dict[str, _GroupedStream] = {}
+
+    # -- slot table ----------------------------------------------------------
+
+    def _grow(self, min_capacity: int) -> None:
+        """Capacity-doubling growth of the stacked table (amortized O(1)
+        row moves per registered stream)."""
+        new_cap = max(4, self._capacity)
+        while new_cap < min_capacity:
+            new_cap *= 2
+        if new_cap == self._capacity:
+            return
+        add = new_cap - self._capacity
+        fresh = jax.tree.map(jnp.asarray,
+                             sketch_init_stack(add, self.budget, self.dtype))
+        if self._stacked is None:
+            self._stacked = fresh
+        else:
+            self._stacked = jax.tree.map(
+                lambda a, f: jnp.concatenate([a, f], axis=0),
+                self._stacked, fresh)
+        record_ingest_dispatch()
+        self._free.extend(range(self._capacity, new_cap))
+        self._counts.extend([0] * add)
+        self._capacity = new_cap
+
+    def _ensure_slots(self, names: Sequence[str]) -> np.ndarray:
+        """Register any unknown names (growing the table as needed) and
+        return the slot row per name."""
+        missing = [n for n in names if n not in self._names]
+        if missing:
+            if len(self._free) < len(missing):
+                self._grow(self._capacity
+                           + (len(missing) - len(self._free)))
+            recycled = []
+            for n in missing:
+                slot = self._free.pop()
+                if slot in self._dirty:
+                    recycled.append(slot)
+                    self._dirty.discard(slot)
+                self._names[n] = slot
+                self._counts[slot] = 0
+            if recycled:
+                self._stacked = _reset_rows(
+                    self._stacked, jnp.asarray(recycled, jnp.int32))
+                record_ingest_dispatch()
+        return np.asarray([self._names[n] for n in names], dtype=np.int32)
+
+    def _row_state(self, slot: int) -> SketchState:
+        return jax.tree.map(lambda a: a[slot], self._stacked)
+
+    def _chunks_for(self, slot: int) -> List[jax.Array]:
+        """Lazily slice this slot's buffered chunks out of the tick ring."""
+        out = []
+        for rec in self._ring:
+            for i in np.nonzero(rec.slots == slot)[0]:
+                nv = int(rec.n_valid[i])
+                if nv:
+                    out.append(rec.data[int(i), :nv])
+        return out
 
     # -- stream lifecycle ---------------------------------------------------
 
-    def stream(self, name: str) -> _Stream:
-        if name not in self._streams:
-            self._streams[name] = _Stream(
-                state=sketch_init(self.budget, self.dtype), chunks=[], n=0)
-        return self._streams[name]
+    def stream(self, name: str) -> _StreamView:
+        """Get-or-create accessor: registers ``name`` (assigning a slot) if
+        unknown and returns a read-only view of its row + chunks.  Reads
+        that must NOT mutate go through ``stream_count``/``rank_bound``."""
+        self._ensure_slots([name])
+        slot = self._names[name]
+        return _StreamView(state=self._row_state(slot),
+                           chunks=self._chunks_for(slot),
+                           n=self._counts[slot])
 
     def streams(self):
-        return sorted(self._streams)
+        return sorted(self._names)
 
     def drop_stream(self, name: str) -> None:
-        self._streams.pop(name, None)
+        slot = self._names.pop(name, None)
+        if slot is not None:
+            self._free.append(slot)
+            self._dirty.add(slot)
+            self._counts[slot] = 0
+            for rec in self._ring:
+                rec.slots[rec.slots == slot] = -1
+            # drop records no live stream references
+            self._ring = [r for r in self._ring if (r.slots >= 0).any()]
         self._grouped.pop(name, None)
 
     def stream_count(self, name: str) -> int:
-        return self.stream(name).n
+        """Non-mutating read: 0 for unknown names (no slot is created)."""
+        slot = self._names.get(name)
+        return self._counts[slot] if slot is not None else 0
 
     def grouped_stream_count(self, name: str) -> int:
         st = self._grouped.get(name)
         return st.n if st else 0
 
     def rank_bound(self, name: str) -> int:
-        """The live sketch's tracked worst-case query rank error."""
-        return int(sketch_rank_bound(self.stream(name).state))
+        """The live sketch's tracked worst-case query rank error.
+        Non-mutating read: unknown names raise ``KeyError``."""
+        slot = self._names.get(name)
+        if slot is None:
+            raise KeyError(f"unknown stream {name!r}")
+        return int(sketch_rank_bound(self._row_state(slot)))
 
     # -- ingest -------------------------------------------------------------
 
     def ingest(self, name: str, batch) -> None:
-        """Fold one batch into the stream: buffer the raw values and advance
-        the resident sketch (ONE sort, of the batch only — the per-query
-        sketch sort this state exists to delete).
+        """Fold one batch into one stream: S=1 case of ``ingest_batch``."""
+        self.ingest_batch([name], [batch])
 
-        NaN policy: reject (DESIGN.md §7).  Validating once at ingest means
-        ``exact``/``approx`` never see a NaN, so queries stay check-free.
+    def ingest_batch(self, names: Sequence[str], batches,
+                     *, transform: Optional[str] = None) -> None:
+        """Fold one batch per named stream — ONE tick, a CONSTANT number of
+        device dispatches no matter how many streams it touches:
+
+          1. pack the batches into one sentinel-padded (S, L) matrix
+             (host-side for numpy inputs; one jitted call for device
+             inputs),
+          2. one jitted gather→``sketch_update_batch``→scatter over the
+             slot table (ONE batched sort — ticks the sketch-sort counter
+             once),
+          3. append one ``_TickRecord`` to the ring.
+
+        ``transform`` names a device-side pre-transform from the module
+        ``_TRANSFORMS`` table (e.g. ``"abs_f32"`` for calibration).
+        NaN policy: reject (DESIGN.md §7) — validating once at ingest
+        means queries never see a NaN, so they stay check-free.
         """
-        st = self.stream(name)
-        batch = jnp.asarray(batch).reshape(-1).astype(self.dtype)
-        if self.check_nans:
-            local_ops.reject_nans(batch, "QuantileService.ingest")
-        if batch.size == 0:
+        names = list(names)
+        batches = list(batches)
+        if len(names) != len(batches):
+            raise ValueError(f"names/batches length mismatch: "
+                             f"{len(names)} vs {len(batches)}")
+        if len(set(names)) != len(names):
+            raise ValueError("duplicate stream names in one ingest tick")
+        if not names:
             return
-        st.chunks.append(batch)
-        st.n += int(batch.size)
-        record_sketch_sort()            # sketch_update sorts the batch
-        st.state = _update_jit(st.state, batch)
+        if transform is not None and transform not in _TRANSFORMS:
+            raise ValueError(f"unknown transform {transform!r}; "
+                             f"have {sorted(_TRANSFORMS)}")
+
+        slots = self._ensure_slots(names)
+
+        device_in = transform is not None or any(
+            isinstance(b, jax.Array) for b in batches)
+        if device_in:
+            lengths = [int(np.prod(jnp.shape(b))) for b in batches]
+        else:
+            batches = [np.asarray(b).reshape(-1) for b in batches]
+            lengths = [b.size for b in batches]
+        length = max(lengths)
+        if length == 0:
+            return                      # streams registered, nothing to fold
+
+        if device_in:
+            matrix = _pack_fn(length, self.dtype.name, transform)(*batches)
+            record_ingest_dispatch()    # the one packing dispatch
+        else:
+            hi = _high_sentinel_np(self.dtype)
+            host = np.full((len(batches), length), hi, dtype=self.dtype)
+            for i, b in enumerate(batches):
+                host[i, :lengths[i]] = b
+            matrix = jnp.asarray(host)
+            record_ingest_dispatch()    # the one host->device transfer
+        n_valid = np.asarray(lengths, dtype=np.int32)
+
+        if self.check_nans:
+            local_ops.reject_nans(matrix, "QuantileService.ingest")
+
+        record_sketch_sort()            # sketch_update_batch sorts the tick
+        record_ingest_dispatch()        # the one batched update dispatch
+        self._stacked = _update_rows(self._stacked,
+                                     jnp.asarray(slots), matrix,
+                                     jnp.asarray(n_valid))
+        for slot, nv in zip(slots, n_valid):
+            self._counts[int(slot)] += int(nv)
+        self._ring.append(_TickRecord(data=matrix, slots=slots.copy(),
+                                      n_valid=n_valid))
 
     def ingest_grouped(self, name: str, values, keys) -> None:
         """Buffer one (values, keys) batch for per-group queries.  Keys are
@@ -243,40 +542,139 @@ class QuantileService:
         st.key_chunks.append(keys)
         st.n += int(values.size)
 
+    # -- fold (Quancurrent-style worker buffers) -----------------------------
+
+    def local_buffer(self) -> "QuantileService":
+        """A private worker-side buffer with this service's configuration —
+        ingest into it contention-free, then ``fold`` it back in."""
+        return QuantileService(eps=self.eps, budget=self.budget,
+                               dtype=self.dtype, fused=self.fused,
+                               check_nans=self.check_nans,
+                               backend=self.backend)
+
+    def fold(self, other: "QuantileService") -> None:
+        """Fold a worker's local buffer into this service: ONE batched
+        ``sketch_merge_batch`` dispatch aligns the buffers' streams onto
+        our slots (slack composes by max under merge, so warm answers stay
+        exact), and the buffer's tick ring is re-slotted host-side."""
+        if other.budget != self.budget or other.dtype != self.dtype:
+            raise ValueError(
+                f"cannot fold: budget/dtype mismatch "
+                f"({other.budget},{other.dtype}) vs "
+                f"({self.budget},{self.dtype})")
+        names = sorted(other._names)
+        if names:
+            my_slots = self._ensure_slots(names)
+            their_slots = np.asarray([other._names[n] for n in names],
+                                     dtype=np.int32)
+            self._stacked = _merge_rows(self._stacked,
+                                        jnp.asarray(my_slots),
+                                        other._stacked,
+                                        jnp.asarray(their_slots))
+            record_ingest_dispatch()
+            remap = {int(t): int(m)
+                     for t, m in zip(their_slots, my_slots)}
+            for t, m in remap.items():
+                self._counts[m] += other._counts[t]
+            for rec in other._ring:
+                new_slots = np.asarray(
+                    [remap.get(int(s), -1) for s in rec.slots],
+                    dtype=np.int32)
+                if (new_slots >= 0).any():
+                    self._ring.append(_TickRecord(
+                        data=rec.data, slots=new_slots,
+                        n_valid=rec.n_valid.copy()))
+        for name, gs in other._grouped.items():
+            mine = self._grouped.setdefault(name, _GroupedStream([], [], 0))
+            mine.chunks.extend(gs.chunks)
+            mine.key_chunks.extend(gs.key_chunks)
+            mine.n += gs.n
+
     # -- queries ------------------------------------------------------------
+
+    def _require(self, name: str) -> int:
+        slot = self._names.get(name)
+        if slot is None or self._counts[slot] == 0:
+            raise ValueError(f"stream {name!r} is empty")
+        return slot
 
     def approx(self, name: str, q: float):
         """Approximate q-quantile from the sketch alone: O(s), zero passes
         over the data; rank error <= ``rank_bound(name)``."""
-        st = self.stream(name)
-        if st.n == 0:
-            raise ValueError(f"stream {name!r} is empty")
-        k = local_ops.target_rank(st.n, q)
-        return _query_jit(st.state, k)
+        slot = self._require(name)
+        k = local_ops.target_rank(self._counts[slot], q)
+        return _query_jit(self._row_state(slot), k)
 
     def exact(self, name: str, q: float, *, warm: bool = True):
         """EXACT q-quantile of everything ingested so far.
 
-        warm=True (default): pivot straight from the live sketch — no
+        warm=True (default): pivot straight from the live sketch row — no
         sketch-phase sort; 2 of the paper's 3 actions.  warm=False is the
         cold reference path: rebuild the sketch from the buffered chunks
         (one sort per chunk) exactly as a stateless job would, then run the
         same count+extract+resolve.  Both are exact, hence bit-identical.
         """
-        st = self.stream(name)
-        if st.n == 0:
-            raise ValueError(f"stream {name!r} is empty")
-        k = local_ops.target_rank(st.n, q)
+        slot = self._require(name)
+        n = self._counts[slot]
+        k = local_ops.target_rank(n, q)
+        chunks = self._chunks_for(slot)
 
         if warm:
-            pivot = _query_jit(st.state, k)
+            state = self._row_state(slot)
+            pivot = _query_jit(state, k)
             # cap from the TRACKED bound (+inf-safe), padded to a stable
             # 128-lane multiple so growing streams reuse the same trace
-            bound = int(sketch_rank_bound(st.state))
+            bound = int(sketch_rank_bound(state))
         else:
-            pivot, bound = self._cold_pivot(st, k)
-        cap = min(st.n, _round_up(bound + 2, 128))
-        return self._count_extract_resolve(st, k, pivot, cap)
+            pivot, bound = self._cold_pivot(chunks, k)
+        cap = min(n, _round_up(bound + 2, 128))
+        return self._count_extract_resolve(chunks, n, k, pivot, cap)
+
+    def exact_all(self, qs):
+        """EXACT quantiles at every level in ``qs`` for EVERY non-empty
+        stream — ONE fused job through the grouped engine instead of a
+        per-stream query loop.  Streams become group ids, the slot table
+        answers all G·Q pivots in one batched call (no sketch-phase sort —
+        this is the warm path for the whole tenant population), and each
+        tick record is counted/extracted in ONE segmented pass (one HBM
+        stream with ``fused=True``).  Returns ``{name: (Q,) values}``.
+        """
+        qs = tuple(float(q) for q in qs)
+        if not qs:
+            raise ValueError("need at least one level")
+        active = [(n, s) for n, s in sorted(self._names.items())
+                  if self._counts[s] > 0]
+        if not active:
+            return {}
+        G, Q = len(active), len(qs)
+        slots = np.asarray([s for _, s in active], dtype=np.int32)
+        gid_of_slot = {int(s): g for g, s in enumerate(slots)}
+        counts = [self._counts[int(s)] for s in slots]
+
+        rows = jax.tree.map(lambda a: a[jnp.asarray(slots)], self._stacked)
+        # per-stream counts are host-side registry state, so the float
+        # target-rank rule matches exact()'s bit-for-bit
+        kmat_host = [[local_ops.target_rank(c, q) for q in qs]
+                     for c in counts]
+        kmat = jnp.asarray(kmat_host, jnp.int32)
+        pivots = _query_batch_jit(rows, kmat)              # (G, Q), one call
+        bound = int(jnp.max(_bound_batch_jit(rows)))       # one call
+        n_max = max(counts)
+        cap = min(n_max, _round_up(bound + 2, 128))
+
+        if self.fused:
+            # the Pallas segmented kernel streams each record from HBM once
+            # for ALL G*Q pivots — the one-pass-per-shard contract
+            pairs = self._ring_pairs(gid_of_slot)
+            out = self._segmented_resolve(pairs, kmat, pivots, cap, G, Q,
+                                          n_max)
+        else:
+            # jnp path: the ring is row-per-stream, so each row meets only
+            # its own Q pivots (O(S*L*Q), scalable to 10^6 streams where
+            # the flat segmented fallback would pay O(S*L * G*Q))
+            out = self._rowwise_resolve(gid_of_slot, kmat, pivots, cap,
+                                        G, Q, n_max)
+        return {name: out[g] for g, (name, _) in enumerate(active)}
 
     def grouped(self, name: str, qs, num_groups: int):
         """EXACT quantiles at every level in ``qs`` for ALL ``num_groups``
@@ -290,9 +688,9 @@ class QuantileService:
 
         This is a COLD query: per-group sketches are rebuilt from the
         buffered chunks each time (one (key, value) sort per chunk, ticked
-        on the sketch-sort counter).  A per-group resident ``SketchState``
-        dict is the warm-path extension; the count+extract side is already
-        minimal — one fused HBM pass per chunk with ``fused=True``.
+        on the sketch-sort counter).  ``exact_all`` is the warm analogue
+        over named streams; the count+extract side is already minimal —
+        one fused HBM pass per chunk with ``fused=True``.
         """
         from repro.core.grouped import (grouped_sketch_samples,
                                         query_grouped_sketch)
@@ -325,60 +723,126 @@ class QuantileService:
         pivots = query_grouped_sketch(g_vals, g_wts, slack, kmat)
 
         cap = min(st.n, _round_up(math.ceil(self.eps * st.n) + 2, 128))
-        return self._grouped_resolve(st, kmat, pivots, cap, G, Q)
+        pairs = list(zip(st.chunks, st.key_chunks))
+        return self._segmented_resolve(pairs, kmat, pivots, cap, G, Q, st.n)
 
     # -- internals ----------------------------------------------------------
 
-    def _grouped_resolve(self, st: _GroupedStream, kmat, pivots, cap: int,
-                         G: int, Q: int):
-        """Actions 2+3 of the grouped job over the buffered chunks, with the
-        same widen-and-retry guard as ``_count_extract_resolve`` so
-        exactness never hinges on the sketch bound."""
+    def _ring_pairs(self, gid_of_slot: Dict[int, int]):
+        """(values, group-keys) flat pairs from the tick ring: each record's
+        matrix flattens to one chunk whose keys are the per-row group id
+        (-1 on pad lanes and rows of inactive/dropped streams — the
+        segmented engine ignores out-of-range ids)."""
+        pairs = []
+        for rec in self._ring:
+            s_tick, length = rec.data.shape
+            keys = np.full((s_tick, length), -1, dtype=np.int32)
+            hit = False
+            for i in range(s_tick):
+                gid = gid_of_slot.get(int(rec.slots[i]))
+                if gid is not None and rec.n_valid[i]:
+                    keys[i, :rec.n_valid[i]] = gid
+                    hit = True
+            if hit:
+                pairs.append((rec.data.reshape(-1),
+                              jnp.asarray(keys.reshape(-1))))
+        return pairs
+
+    def _finish_resolve(self, counts, belows, aboves, kmat, pivots,
+                        cap: int, G: int, Q: int):
+        """Shared resolve tail of every segmented query: flatten the (G, Q)
+        matrix onto ``engine.phase_resolve`` and report the realized rank
+        ``need`` so callers can widen-and-retry."""
+        below = jnp.concatenate(
+            [b.reshape(G * Q, -1) for b in belows], axis=-1)
+        above = jnp.concatenate(
+            [a.reshape(G * Q, -1) for a in aboves], axis=-1)
+        flat_c = counts.reshape(G * Q, 3)
+        out = engine.phase_resolve(pivots.reshape(G * Q),
+                                   kmat.reshape(G * Q),
+                                   flat_c, below, above, cap)
+        lt, eq = flat_c[:, 0], flat_c[:, 1]
+        kf = kmat.reshape(G * Q)
+        need = int(jnp.max(jnp.maximum(lt - kf + 1, kf - (lt + eq))))
+        return out.reshape(G, Q), need
+
+    def _segmented_resolve(self, pairs, kmat, pivots, cap: int,
+                           G: int, Q: int, n_limit: int):
+        """Actions 2+3 of a segmented job over (values, keys) chunk pairs,
+        with the same widen-and-retry guard as ``_count_extract_resolve``
+        so exactness never hinges on the sketch bound.  Shared by
+        ``grouped`` (keyed batches) and fused ``exact_all`` (tick ring)."""
         counts = jnp.zeros((G, Q, 3), jnp.int32)
         belows, aboves = [], []
-        for v, k in zip(st.chunks, st.key_chunks):
+        for v, k in pairs:
             cap_c = min(v.shape[0], cap)
             c, b, a = _grouped_chunk_fn(cap_c, self.fused,
                                         self.backend)(v, k, pivots)
             counts = counts + c
             belows.append(b)
             aboves.append(a)
-        below = jnp.concatenate(belows, axis=-1).reshape(G * Q, -1)
-        above = jnp.concatenate(aboves, axis=-1).reshape(G * Q, -1)
-        flat_c = counts.reshape(G * Q, 3)
-
-        def one(pivot, kk, c, b, a):
-            return local_ops.resolve(pivot, kk, c[0], c[1], b, a, cap)
-
-        out = jax.vmap(one)(pivots.reshape(G * Q), kmat.reshape(G * Q),
-                            flat_c, below, above)
-        lt, eq = flat_c[:, 0], flat_c[:, 1]
-        kf = kmat.reshape(G * Q)
-        need = int(jnp.max(jnp.maximum(lt - kf + 1, kf - (lt + eq))))
+        out, need = self._finish_resolve(counts, belows, aboves, kmat,
+                                         pivots, cap, G, Q)
         if need > cap:     # sketch bound violated — widen and rerun
-            return self._grouped_resolve(
-                st, kmat, pivots, min(st.n, _round_up(need + 2, 128)), G, Q)
-        return out.reshape(G, Q)
+            return self._segmented_resolve(
+                pairs, kmat, pivots,
+                min(n_limit, _round_up(need + 2, 128)), G, Q, n_limit)
+        return out
 
-    def _cold_pivot(self, st: _Stream, k: int):
+    def _rowwise_resolve(self, gid_of_slot: Dict[int, int], kmat, pivots,
+                         cap: int, G: int, Q: int, n_limit: int):
+        """Actions 2+3 of ``exact_all`` straight off the tick ring: one
+        row-aligned dispatch per record (each row counts against its own
+        stream's Q pivots), results scattered onto the group axis.  Same
+        widen-and-retry guard as every other resolve."""
+        lo, hi = local_ops._sentinels(self.dtype)
+        counts = jnp.zeros((G, Q, 3), jnp.int32)
+        belows, aboves = [], []
+        for rec in self._ring:
+            sel = [i for i, s in enumerate(rec.slots)
+                   if int(s) in gid_of_slot and rec.n_valid[i]]
+            if not sel:
+                continue
+            gids = np.asarray([gid_of_slot[int(rec.slots[i])] for i in sel],
+                              dtype=np.int32)
+            cap_c = min(rec.data.shape[1], cap)
+            c, b, a = _row_chunk_fn(cap_c)(
+                rec.data[np.asarray(sel)], pivots[jnp.asarray(gids)],
+                jnp.asarray(rec.n_valid[sel]))
+            # one slot appears at most once per record, so scatter is 1:1
+            counts = counts.at[gids].add(c)
+            belows.append(jnp.full((G, Q, cap_c), lo,
+                                   self.dtype).at[gids].set(b))
+            aboves.append(jnp.full((G, Q, cap_c), hi,
+                                   self.dtype).at[gids].set(a))
+        out, need = self._finish_resolve(counts, belows, aboves, kmat,
+                                         pivots, cap, G, Q)
+        if need > cap:
+            return self._rowwise_resolve(
+                gid_of_slot, kmat, pivots,
+                min(n_limit, _round_up(need + 2, 128)), G, Q, n_limit)
+        return out
+
+    def _cold_pivot(self, chunks: List[jax.Array], k: int):
         """The stateless job's action 1: re-sketch every buffered chunk from
         scratch (one sort per chunk — ticks the sketch-sort counter), merge,
         query.  This is what every query would cost without the resident
         state."""
         cold = sketch_init(self.budget, self.dtype)
-        for chunk in st.chunks:
+        for chunk in chunks:
             record_sketch_sort()
             cold = _update_jit(cold, chunk)
         pivot = _query_jit(cold, k)
         return pivot, int(sketch_rank_bound(cold))
 
-    def _count_extract_resolve(self, st: _Stream, k: int, pivot, cap: int):
+    def _count_extract_resolve(self, chunks: List[jax.Array], n: int,
+                               k: int, pivot, cap: int):
         """Actions 2+3 over the buffered chunks (chunks == shards of the
         single-process engine).  Retries with a wider cap in the
         (tracked-bound-violating) pathological case so exactness never
         depends on the stream's history."""
         counts, belows, aboves = [], [], []
-        for chunk in st.chunks:
+        for chunk in chunks:
             cap_c = min(chunk.shape[0], cap)
             c, b, a = _chunk_fn(cap_c, self.fused, self.backend)(chunk, pivot)
             counts.append(c)
@@ -391,8 +855,89 @@ class QuantileService:
         if need > cap:     # tracked bound violated — impossible by the
             # invariant, but exactness must not hinge on it: widen and rerun
             return self._count_extract_resolve(
-                st, k, pivot, min(st.n, _round_up(need + 2, 128)))
+                chunks, n, k, pivot, min(n, _round_up(need + 2, 128)))
         return out
+
+    # -- snapshot / restore -------------------------------------------------
+
+    def snapshot(self):
+        """Capture the full service state as ``(leaves, extra)``:
+
+          * ``leaves`` — a flat list of arrays (the stacked ``SketchState``
+            leaves, then per tick record its data/slots/n_valid, then each
+            grouped stream's value/key chunks), the pytree a checkpoint
+            round-trips leaf-by-leaf, and
+          * ``extra`` — JSON-able metadata (registry, counts, config, ring
+            and grouped-chunk layout) that rebuilds the structure.
+
+        ``checkpoint.save_service_snapshot`` persists this pair;
+        ``from_snapshot`` inverts it bit-exactly — a restored service's
+        warm ``exact()`` answers match without replaying any history."""
+        leaves: List = []
+        if self._stacked is not None:
+            leaves.extend([self._stacked.values, self._stacked.weights,
+                           self._stacked.n, self._stacked.slack])
+        for rec in self._ring:
+            leaves.extend([rec.data, rec.slots, rec.n_valid])
+        grouped_meta = {}
+        for name in sorted(self._grouped):
+            gs = self._grouped[name]
+            for v, k in zip(gs.chunks, gs.key_chunks):
+                leaves.extend([v, k])
+            grouped_meta[name] = {"chunks": len(gs.chunks), "n": gs.n}
+        extra = {
+            "format": 1,
+            "eps": self.eps,
+            "budget": self.budget,
+            "dtype": self.dtype.name,
+            "fused": self.fused,
+            "check_nans": self.check_nans,
+            "has_table": self._stacked is not None,
+            "capacity": self._capacity,
+            "names": dict(self._names),
+            "free": list(self._free),
+            "dirty": sorted(self._dirty),
+            "counts": list(self._counts),
+            "num_ticks": len(self._ring),
+            "grouped": grouped_meta,
+        }
+        return leaves, extra
+
+    @classmethod
+    def from_snapshot(cls, leaves, extra, *, fused: Optional[bool] = None,
+                      backend=None) -> "QuantileService":
+        """Rebuild a service from ``snapshot()`` output.  ``fused`` /
+        ``backend`` override the saved execution flags (they steer data
+        movement only — answers are exactness-invariant), so a restore may
+        land on different hardware than the save."""
+        svc = cls(eps=extra["eps"], budget=extra["budget"],
+                  dtype=extra["dtype"],
+                  fused=extra["fused"] if fused is None else fused,
+                  check_nans=extra["check_nans"], backend=backend)
+        it = iter(leaves)
+        if extra["has_table"]:
+            svc._stacked = SketchState(values=jnp.asarray(next(it)),
+                                       weights=jnp.asarray(next(it)),
+                                       n=jnp.asarray(next(it)),
+                                       slack=jnp.asarray(next(it)))
+        svc._capacity = int(extra["capacity"])
+        svc._names = {str(k): int(v) for k, v in extra["names"].items()}
+        svc._free = [int(s) for s in extra["free"]]
+        svc._dirty = {int(s) for s in extra["dirty"]}
+        svc._counts = [int(c) for c in extra["counts"]]
+        for _ in range(int(extra["num_ticks"])):
+            data = jnp.asarray(next(it))
+            slots = np.asarray(next(it)).astype(np.int32)
+            n_valid = np.asarray(next(it)).astype(np.int32)
+            svc._ring.append(_TickRecord(data=data, slots=slots,
+                                         n_valid=n_valid))
+        for name, meta in extra["grouped"].items():
+            gs = _GroupedStream([], [], int(meta["n"]))
+            for _ in range(int(meta["chunks"])):
+                gs.chunks.append(jnp.asarray(next(it)))
+                gs.key_chunks.append(jnp.asarray(next(it)))
+            svc._grouped[name] = gs
+        return svc
 
 
 class StreamingCalibrator:
@@ -401,10 +946,12 @@ class StreamingCalibrator:
 
     The pre-streaming flow re-ran GK Select's full 3-action job on a
     re-concatenated activation history every time a scale was needed; this
-    folds each step's activations into a persistent per-tensor stream
-    (``observe``) and answers scales either approximately in O(s)
-    (``approx_scale``) or exactly with a WARM 2-action query (``scale``) —
-    no sketch-phase sort ever happens at scale-query time."""
+    folds each step's activations into persistent per-tensor streams and
+    answers scales either approximately in O(s) (``approx_scale``) or
+    exactly with a WARM 2-action query (``scale``) — no sketch-phase sort
+    ever happens at scale-query time.  ``observe_many`` batches ALL of a
+    decode step's tensors into ONE device tick (the slot-table ingest), so
+    per-step calibration overhead stays constant in the tensor count."""
 
     def __init__(self, q: float = 0.999, *, eps: float = 0.01,
                  fused: bool = False, backend=None):
@@ -412,8 +959,17 @@ class StreamingCalibrator:
         self.service = QuantileService(eps=eps, fused=fused, backend=backend)
 
     def observe(self, name: str, activations) -> None:
-        acts = jnp.abs(jnp.asarray(activations).astype(jnp.float32))
-        self.service.ingest(name, acts)
+        self.observe_many({name: activations})
+
+    def observe_many(self, named: Dict[str, jax.typing.ArrayLike]) -> None:
+        """Fold one decode step's activations — every tensor at once — into
+        the per-tensor streams: ONE batched device call regardless of how
+        many tensors the step observed (|x| in f32 applied on device)."""
+        if not named:
+            return
+        names = sorted(named)
+        self.service.ingest_batch(names, [named[n] for n in names],
+                                  transform="abs_f32")
 
     def scale(self, name: str):
         """Exact symmetric int8 scale (the paper's reproducibility case):

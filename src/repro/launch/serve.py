@@ -68,9 +68,11 @@ def generate(cfg: ModelConfig, params, prompts: jax.Array, *,
     """Batched prefill + autoregressive decode.
 
     ``calibrator`` observes the output activations (logits) of the prefill
-    and every decode step into a running per-stream sketch — the streaming
+    and every decode step into running per-tensor streams — the streaming
     replacement for capturing an activation history and re-sketching it per
-    calibration query."""
+    calibration query.  All of a step's observed tensors go through
+    ``observe_many`` as ONE batched service tick (one device dispatch per
+    step however many tensors are watched)."""
     B, S = prompts.shape
     batch = {"tokens": prompts}
     if extras:
@@ -81,7 +83,7 @@ def generate(cfg: ModelConfig, params, prompts: jax.Array, *,
 
     logits, cache = prefill_fn(params, batch)
     if calibrator is not None:
-        calibrator.observe("logits", logits)
+        calibrator.observe_many({"logits": logits})
     key = jax.random.PRNGKey(seed)
     out = []
     tok = jnp.argmax(logits, -1)[:, None].astype(jnp.int32)
@@ -90,7 +92,7 @@ def generate(cfg: ModelConfig, params, prompts: jax.Array, *,
         cache_len = jnp.full((B,), S + i, jnp.int32)
         logits, cache = decode_fn(params, tok, cache, cache_len)
         if calibrator is not None:
-            calibrator.observe("logits", logits)
+            calibrator.observe_many({"logits": logits})
         if greedy:
             tok = jnp.argmax(logits, -1)[:, None].astype(jnp.int32)
         else:

@@ -109,6 +109,26 @@ class TestQuantileService:
         with pytest.raises(ValueError):
             svc.approx("nope", 0.5)
 
+    def test_reads_do_not_create_streams(self):
+        """Read-path mutation fix (ISSUE 8): stream_count/rank_bound on an
+        unknown name must not register it — ``streams()`` is pinned
+        unchanged after every read."""
+        svc = QuantileService()
+        svc.ingest("real", np.arange(10, dtype=np.float32))
+        before = svc.streams()
+        assert svc.stream_count("ghost") == 0
+        with pytest.raises(KeyError):
+            svc.rank_bound("ghost")
+        with pytest.raises(ValueError):
+            svc.exact("ghost", 0.5)
+        with pytest.raises(ValueError):
+            svc.approx("ghost", 0.5)
+        assert svc.grouped_stream_count("ghost") == 0
+        assert svc.streams() == before == ["real"]
+        # the get-or-create accessor is the one deliberate registration path
+        svc.stream("made")
+        assert svc.streams() == ["made", "real"]
+
 
 class TestStreamingCalibrator:
     def test_scale_matches_oneshot_oracle(self):
