@@ -18,7 +18,8 @@ from .sketch import (GKSketch, merge_fold_left, merge_tree,
                      SketchState, sketch_budget, sketch_init, sketch_update,
                      sketch_merge, sketch_query_rank, sketch_rank_bound,
                      sketch_update_padded, sketch_update_batch,
-                     sketch_merge_batch, sketch_stack, sketch_unstack,
+                     sketch_merge_batch, sketch_merge_many,
+                     sketch_stack, sketch_unstack,
                      sketch_init_stack, sketch_query_rank_batch,
                      sketch_rank_bound_batch,
                      reset_sketch_sorts, sketch_sorts, record_sketch_sort)
@@ -42,6 +43,7 @@ __all__ = [
     "SketchState", "sketch_budget", "sketch_init", "sketch_update",
     "sketch_merge", "sketch_query_rank", "sketch_rank_bound",
     "sketch_update_padded", "sketch_update_batch", "sketch_merge_batch",
+    "sketch_merge_many",
     "sketch_stack", "sketch_unstack", "sketch_init_stack",
     "sketch_query_rank_batch", "sketch_rank_bound_batch",
     "reset_sketch_sorts", "sketch_sorts", "record_sketch_sort",

@@ -28,6 +28,7 @@ from __future__ import annotations
 
 import dataclasses
 import math
+import threading
 from typing import NamedTuple, Tuple
 
 import jax
@@ -41,25 +42,32 @@ import numpy as np
 # rebuild — never inside traced code, so the count is exact per eager call
 # (a trace-time tick would double-count the first call of each shape).
 # benchmarks/bench_service.py asserts a warm exact query ticks this ZERO times.
+# Guarded by a lock: with threaded ingest workers (launch/ingest_pool.py) the
+# bare `dict[k] += n` read-modify-write races and silently drops ticks,
+# which would let the bench/test assertions pass on a wrong count.
 # ---------------------------------------------------------------------------
 
 _SKETCH_SORTS = {"total": 0}
+_SKETCH_SORTS_LOCK = threading.Lock()
 
 
 def reset_sketch_sorts() -> None:
     """Zero the sketch-phase sort counter."""
-    _SKETCH_SORTS["total"] = 0
+    with _SKETCH_SORTS_LOCK:
+        _SKETCH_SORTS["total"] = 0
 
 
 def sketch_sorts() -> int:
     """Sketch-construction sorts dispatched since the last reset."""
-    return _SKETCH_SORTS["total"]
+    with _SKETCH_SORTS_LOCK:
+        return _SKETCH_SORTS["total"]
 
 
 def record_sketch_sort(n: int = 1) -> None:
     """Tick the sketch-phase sort counter (called by every code path that
-    sorts raw data to build or rebuild a sketch)."""
-    _SKETCH_SORTS["total"] += n
+    sorts raw data to build or rebuild a sketch).  Thread-safe."""
+    with _SKETCH_SORTS_LOCK:
+        _SKETCH_SORTS["total"] += n
 
 # ---------------------------------------------------------------------------
 # TPU-native sample sketch (pure jnp; used inside jit / shard_map)
@@ -327,6 +335,30 @@ def sketch_merge_batch(a: SketchState, b: SketchState) -> SketchState:
         raise ValueError(f"stacked sketch shapes differ: {a.values.shape} "
                          f"vs {b.values.shape}")
     return jax.vmap(sketch_merge)(a, b)
+
+
+def sketch_merge_many(states) -> SketchState:
+    """Tree-reduce merge of ANY number of equally-shaped stacked summaries in
+    one traced expression — the fold scheduler's multi-buffer primitive: K
+    worker buffers land in the shared table through ONE jitted dispatch
+    instead of K pairwise ``sketch_merge_batch`` calls (DESIGN.md §10).
+
+    Merge composes the §6 slack bound in every association order (each
+    pairwise merge takes max(own slack + other's widest gap)), so the reduce
+    shape only affects the *approximate* summary, never exactness.  The tree
+    keeps the bound tight: the worst-case slack grows with the reduce depth
+    ceil(log2 K), not with K as a sequential foldl would.
+    """
+    items = list(states)
+    if not items:
+        raise ValueError("need at least one SketchState to merge")
+    while len(items) > 1:
+        nxt = [sketch_merge_batch(items[i], items[i + 1])
+               for i in range(0, len(items) - 1, 2)]
+        if len(items) % 2:
+            nxt.append(items[-1])
+        items = nxt
+    return items[0]
 
 
 def sketch_stack(states) -> SketchState:

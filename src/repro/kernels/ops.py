@@ -35,6 +35,7 @@ tick once at trace time and are not the counter's job.
 from __future__ import annotations
 
 import functools
+import threading
 
 import jax
 import jax.numpy as jnp
@@ -49,21 +50,29 @@ from .fused_select import byte_histogram as _byte_histogram_kernel  # noqa: F401
 # HBM pass accounting (the bandwidth-bound cost model; see DESIGN.md §2)
 # ---------------------------------------------------------------------------
 
+# Lock-guarded: concurrent ingest/query threads (launch/ingest_pool.py) all
+# route through these wrappers, and the bare `dict[k] += n` read-modify-write
+# would drop ticks under contention — a silently-wrong pass count is worse
+# than none, because the benches ASSERT on it.
 _HBM_PASSES = {"total": 0}
+_HBM_LOCK = threading.Lock()
 
 
 def reset_hbm_passes() -> None:
     """Zero the full-array streaming-pass counter."""
-    _HBM_PASSES["total"] = 0
+    with _HBM_LOCK:
+        _HBM_PASSES["total"] = 0
 
 
 def hbm_passes() -> int:
     """Full-array HBM streaming passes dispatched since the last reset."""
-    return _HBM_PASSES["total"]
+    with _HBM_LOCK:
+        return _HBM_PASSES["total"]
 
 
 def _tick(n: int = 1) -> None:
-    _HBM_PASSES["total"] += n
+    with _HBM_LOCK:
+        _HBM_PASSES["total"] += n
 
 
 def _backend(backend, use_pallas: bool):

@@ -1,10 +1,13 @@
 """Launch layer: production meshes, sharding rules, step builders, dry-run,
 roofline analysis, train/serve drivers, and the streaming quantile service
-(``quantile_service.QuantileService`` / ``StreamingCalibrator``)."""
+(``quantile_service.QuantileService`` / ``StreamingCalibrator``) with its
+threaded ingest pipeline (``ingest_pool.IngestPool``)."""
 from .quantile_service import (QuantileService, StreamingCalibrator,
                                ingest_dispatches, record_ingest_dispatch,
                                reset_ingest_dispatches)
+from .ingest_pool import IngestPool, default_ingest_workers
 
 __all__ = ["QuantileService", "StreamingCalibrator",
            "ingest_dispatches", "record_ingest_dispatch",
-           "reset_ingest_dispatches"]
+           "reset_ingest_dispatches",
+           "IngestPool", "default_ingest_workers"]

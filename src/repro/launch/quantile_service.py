@@ -39,11 +39,26 @@ ever pushes the realized rank gap past the cap the service retries with
 the exact gap — so ``exact``/``exact_all`` are always bit-identical to the
 cold path (which is bit-identical to a full sort).
 
-Quancurrent-style concurrency (PAPERS.md): workers ingest into private
-``QuantileService`` local buffers and periodically ``fold`` them into the
-shared service — one batched ``sketch_merge_batch`` dispatch per fold,
-slack composing by max — so the hot ingest path never contends on the
-shared table.
+Quancurrent-style concurrency (PAPERS.md, DESIGN.md §10): workers ingest
+into private ``QuantileService`` local buffers and periodically ``fold``
+them into the shared service — one batched ``sketch_merge_batch`` dispatch
+per fold, slack composing by max — so the hot ingest path never contends
+on the shared table.  Three faces serve the threaded pipeline
+(``launch/ingest_pool.py`` drives all of them):
+
+  * ``stage(name, batch)`` — host-side append into the buffer, NO device
+    work; ``commit_staged()`` folds everything staged as one batched tick.
+    This is the worker thread's write path: device dispatch moves to the
+    fold scheduler, where it batches across buffers.
+  * ``fold_many(buffers)`` — ONE batched ingest tick for all staged data
+    across the buffers plus ONE ``sketch_merge_many`` dispatch for their
+    materialized slot rows, so K buffers cost one fold's dispatches.
+  * a reader-writer lock — every public mutator takes the write side,
+    every query the read side, so ``approx``/``exact``/``exact_all`` run
+    concurrently with each other and are serialized only against folds.
+    Exact answers are order-invariant (the rank-k element of a multiset
+    does not depend on arrival order), so concurrent ingest keeps
+    ``exact*`` bit-identical to a serial replay of the same batches.
 
 Snapshot/restore: ``snapshot()`` captures the stacked table + tick ring +
 registry as a flat leaf list plus JSON-able metadata (the format
@@ -59,9 +74,12 @@ see a NaN.
 """
 from __future__ import annotations
 
+import contextlib
 import dataclasses
 import functools
 import math
+import os
+import threading
 from typing import Dict, List, Optional, Sequence
 
 import jax
@@ -71,7 +89,8 @@ import numpy as np
 from repro.core import engine, local_ops
 from repro.core.sketch import (SketchState, record_sketch_sort, sketch_budget,
                                sketch_init, sketch_init_stack,
-                               sketch_merge_batch, sketch_query_rank,
+                               sketch_merge_batch, sketch_merge_many,
+                               sketch_query_rank,
                                sketch_query_rank_batch, sketch_rank_bound,
                                sketch_rank_bound_batch, sketch_update,
                                sketch_update_batch)
@@ -86,20 +105,114 @@ def _round_up(x: int, multiple: int) -> int:
 # must issue a CONSTANT number of jitted device calls regardless of how many
 # streams it touches (the dict-of-streams design issued O(S)).  Every device
 # dispatch on the ingest path ticks this; bench_service asserts the count is
-# identical at S=100 and S=10^4.
+# identical at S=100 and S=10^4.  Lock-guarded: with threaded ingest
+# (launch/ingest_pool.py) a bare `+=` drops ticks under contention and the
+# bench assertion would pass on a wrong count.
 _INGEST_DISPATCHES = {"count": 0}
+_INGEST_DISPATCHES_LOCK = threading.Lock()
 
 
 def reset_ingest_dispatches() -> None:
-    _INGEST_DISPATCHES["count"] = 0
+    with _INGEST_DISPATCHES_LOCK:
+        _INGEST_DISPATCHES["count"] = 0
 
 
 def ingest_dispatches() -> int:
-    return _INGEST_DISPATCHES["count"]
+    with _INGEST_DISPATCHES_LOCK:
+        return _INGEST_DISPATCHES["count"]
 
 
 def record_ingest_dispatch(n: int = 1) -> None:
-    _INGEST_DISPATCHES["count"] += n
+    with _INGEST_DISPATCHES_LOCK:
+        _INGEST_DISPATCHES["count"] += n
+
+
+# --- reader-writer lock -----------------------------------------------------
+
+
+class RWLock:
+    """Shared/exclusive lock with a reentrant writer (DESIGN.md §10).
+
+    Queries (readers) overlap each other and are excluded only while a fold
+    or ingest (writer) holds the exclusive side.  The writer is reentrant —
+    ``fold_many`` re-enters ``ingest_batch`` for staged data — and a thread
+    holding the write side may take the read side (it degenerates to a
+    no-op).  Read->write upgrades are NOT supported; no query path mutates.
+    Readers re-entering while a writer *waits* are admitted (writers can
+    starve under a saturated read load, never deadlock — folds are short
+    and ingest pressure bounds read bursts in practice).
+    """
+
+    def __init__(self):
+        self._cond = threading.Condition()
+        self._readers = 0
+        self._writer: Optional[int] = None   # owning thread ident
+        self._depth = 0
+
+    @contextlib.contextmanager
+    def read(self):
+        me = threading.get_ident()
+        if self._writer == me:        # writer re-entering as a reader
+            yield
+            return
+        with self._cond:
+            while self._writer is not None:
+                self._cond.wait()
+            self._readers += 1
+        try:
+            yield
+        finally:
+            with self._cond:
+                self._readers -= 1
+                if self._readers == 0:
+                    self._cond.notify_all()
+
+    @contextlib.contextmanager
+    def write(self):
+        me = threading.get_ident()
+        with self._cond:
+            if self._writer == me:
+                self._depth += 1
+            else:
+                while self._writer is not None or self._readers > 0:
+                    self._cond.wait()
+                self._writer = me
+                self._depth = 1
+        try:
+            yield
+        finally:
+            with self._cond:
+                self._depth -= 1
+                if self._depth == 0:
+                    self._writer = None
+                    self._cond.notify_all()
+
+
+def _locked(kind: str):
+    """Method decorator: run under the service's read ("r") or write ("w")
+    lock.  Public entry points are decorated; internals stay lock-free and
+    rely on the reentrant writer for nested mutator->mutator calls."""
+    def deco(fn):
+        @functools.wraps(fn)
+        def wrapper(self, *args, **kwargs):
+            ctx = self._rw.read() if kind == "r" else self._rw.write()
+            with ctx:
+                return fn(self, *args, **kwargs)
+        return wrapper
+    return deco
+
+
+def _query(fn):
+    """Query decorator: commit any staged host batches first (a write),
+    then run the query under the read lock — so queries always see every
+    value handed to this service, and concurrent queries overlap."""
+    @functools.wraps(fn)
+    def wrapper(self, *args, **kwargs):
+        if self._staged:
+            self.commit_staged()
+        with self._rw.read():
+            return fn(self, *args, **kwargs)
+    return wrapper
 
 
 # Jitted phase kernels live at module level (not on the service instance):
@@ -146,6 +259,37 @@ def _reset_rows(stacked: SketchState, slots) -> SketchState:
 _TRANSFORMS = {
     "abs_f32": lambda a: jnp.abs(a.astype(jnp.float32)),
 }
+
+# Host-side mirrors of _TRANSFORMS, applied at stage() time in a worker
+# thread (|x| clears the sign bit and the ->f32 cast rounds identically on
+# host and device, so staged-then-committed answers stay bit-identical to
+# the device-transform tick).
+_HOST_TRANSFORMS = {
+    "abs_f32": lambda a: np.abs(np.asarray(a).astype(np.float32)),
+}
+
+
+@functools.lru_cache(maxsize=None)
+def _fold_many_fn(num_buffers: int):
+    """ONE dispatch that folds the materialized slot rows of ``num_buffers``
+    worker tables into ours: gather our rows for the union of their stream
+    names, gather each buffer's rows aligned to that union (missing names
+    index an appended empty row via -1), tree-merge all of them with
+    ``sketch_merge_many``, scatter back.  K buffers -> one `_merge_rows`-
+    class dispatch instead of K (DESIGN.md §10)."""
+    @jax.jit
+    def fn(mine: SketchState, my_slots, tables, idxs) -> SketchState:
+        mine_rows = jax.tree.map(lambda a: a[my_slots], mine)
+        parts = [mine_rows]
+        for table, idx in zip(tables, idxs):
+            budget = table.values.shape[1]
+            empty = sketch_init_stack(1, budget, table.values.dtype)
+            ext = jax.tree.map(lambda a, e: jnp.concatenate([a, e], axis=0),
+                               table, empty)
+            parts.append(jax.tree.map(lambda a: a[idx], ext))
+        merged = sketch_merge_many(parts)
+        return jax.tree.map(lambda a, r: a.at[my_slots].set(r), mine, merged)
+    return fn
 
 
 @functools.lru_cache(maxsize=None)
@@ -335,6 +479,11 @@ class QuantileService:
         self.fused = fused
         self.backend = backend
         self.check_nans = check_nans
+        # --- concurrency (DESIGN.md §10) ----------------------------------
+        # Mutators (ingest/fold/drop/stage-commit) take the write side,
+        # queries the read side; worker threads never touch a shared
+        # service's lock because they write into private local_buffer()s.
+        self._rw = RWLock()
         # --- slot table ---------------------------------------------------
         self._stacked: Optional[SketchState] = None   # leaves (capacity, ...)
         self._names: Dict[str, int] = {}              # name -> slot
@@ -344,6 +493,10 @@ class QuantileService:
         self._capacity: int = 0
         self._ring: List[_TickRecord] = []
         self._grouped: Dict[str, _GroupedStream] = {}
+        # --- staged host batches (the worker-thread write path) -----------
+        self._staged: Dict[str, List[np.ndarray]] = {}
+        self._staged_n: int = 0
+        self._staged_unchecked: bool = False   # exotic dtype skipped host NaN check
 
     # -- slot table ----------------------------------------------------------
 
@@ -406,6 +559,7 @@ class QuantileService:
 
     # -- stream lifecycle ---------------------------------------------------
 
+    @_locked("w")
     def stream(self, name: str) -> _StreamView:
         """Get-or-create accessor: registers ``name`` (assigning a slot) if
         unknown and returns a read-only view of its row + chunks.  Reads
@@ -416,9 +570,11 @@ class QuantileService:
                            chunks=self._chunks_for(slot),
                            n=self._counts[slot])
 
+    @_locked("r")
     def streams(self):
         return sorted(self._names)
 
+    @_locked("w")
     def drop_stream(self, name: str) -> None:
         slot = self._names.pop(name, None)
         if slot is not None:
@@ -431,15 +587,20 @@ class QuantileService:
             self._ring = [r for r in self._ring if (r.slots >= 0).any()]
         self._grouped.pop(name, None)
 
+    @_locked("r")
     def stream_count(self, name: str) -> int:
-        """Non-mutating read: 0 for unknown names (no slot is created)."""
+        """Non-mutating read: 0 for unknown names (no slot is created).
+        Staged-but-uncommitted values are not counted (``staged_count``
+        tracks those)."""
         slot = self._names.get(name)
         return self._counts[slot] if slot is not None else 0
 
+    @_locked("r")
     def grouped_stream_count(self, name: str) -> int:
         st = self._grouped.get(name)
         return st.n if st else 0
 
+    @_locked("r")
     def rank_bound(self, name: str) -> int:
         """The live sketch's tracked worst-case query rank error.
         Non-mutating read: unknown names raise ``KeyError``."""
@@ -454,8 +615,10 @@ class QuantileService:
         """Fold one batch into one stream: S=1 case of ``ingest_batch``."""
         self.ingest_batch([name], [batch])
 
+    @_locked("w")
     def ingest_batch(self, names: Sequence[str], batches,
-                     *, transform: Optional[str] = None) -> None:
+                     *, transform: Optional[str] = None,
+                     _nan_checked: bool = False) -> None:
         """Fold one batch per named stream — ONE tick, a CONSTANT number of
         device dispatches no matter how many streams it touches:
 
@@ -471,6 +634,9 @@ class QuantileService:
         ``_TRANSFORMS`` table (e.g. ``"abs_f32"`` for calibration).
         NaN policy: reject (DESIGN.md §7) — validating once at ingest
         means queries never see a NaN, so they stay check-free.
+        ``_nan_checked`` marks batches already validated host-side (the
+        ``stage``/``commit_staged`` path) so the blocking device check is
+        not paid twice.
         """
         names = list(names)
         batches = list(batches)
@@ -510,7 +676,7 @@ class QuantileService:
             record_ingest_dispatch()    # the one host->device transfer
         n_valid = np.asarray(lengths, dtype=np.int32)
 
-        if self.check_nans:
+        if self.check_nans and not _nan_checked:
             local_ops.reject_nans(matrix, "QuantileService.ingest")
 
         record_sketch_sort()            # sketch_update_batch sorts the tick
@@ -523,6 +689,7 @@ class QuantileService:
         self._ring.append(_TickRecord(data=matrix, slots=slots.copy(),
                                       n_valid=n_valid))
 
+    @_locked("w")
     def ingest_grouped(self, name: str, values, keys) -> None:
         """Buffer one (values, keys) batch for per-group queries.  Keys are
         int32 group ids; out-of-range ids belong to no group (the engine
@@ -542,53 +709,171 @@ class QuantileService:
         st.key_chunks.append(keys)
         st.n += int(values.size)
 
+    # -- staging (the worker-thread write path; DESIGN.md §10) ---------------
+
+    @_locked("w")
+    def stage(self, name: str, batch, *,
+              transform: Optional[str] = None) -> None:
+        """Append one batch host-side WITHOUT any device work — the
+        contention-free write an ingest-pool worker thread performs on its
+        private ``local_buffer()``.  ``commit_staged`` (or the fold
+        scheduler via ``fold_many``) later folds everything staged as ONE
+        batched tick per stream, so device-dispatch overhead is paid per
+        epoch, not per batch.
+
+        ``transform`` applies the host mirror of the named ``_TRANSFORMS``
+        entry immediately (in the calling worker thread — that is the
+        point: it is off the producer's critical path).  NaN policy is
+        enforced here when the host dtype supports it, so the error
+        surfaces in the thread that staged the bad batch; exotic dtypes
+        defer the check to commit.  Queries on this service auto-commit,
+        so staged values are never silently invisible to ``exact``."""
+        if transform is not None:
+            if transform not in _HOST_TRANSFORMS:
+                raise ValueError(f"unknown transform {transform!r}; "
+                                 f"have {sorted(_HOST_TRANSFORMS)}")
+            arr = _HOST_TRANSFORMS[transform](batch).reshape(-1)
+        else:
+            arr = np.asarray(batch).reshape(-1)
+        if self.check_nans and jnp.issubdtype(self.dtype, jnp.floating):
+            if isinstance(arr.dtype, np.dtype) and arr.dtype.kind == "f":
+                if np.isnan(arr).any():
+                    raise ValueError(
+                        f"QuantileService.stage: NaN in input for stream "
+                        f"{name!r} (NaN policy REJECT, DESIGN.md §7)")
+            else:        # ml_dtypes etc: host isnan unsupported — defer
+                self._staged_unchecked = True
+        self._staged.setdefault(name, []).append(arr)
+        self._staged_n += int(arr.size)
+
+    @property
+    def staged_count(self) -> int:
+        """Values staged host-side and not yet committed to the table."""
+        return self._staged_n
+
+    @_locked("w")
+    def commit_staged(self) -> None:
+        """Fold everything staged as ONE batched ingest tick (per-stream
+        concatenation -> ``ingest_batch``).  No-op when nothing is staged."""
+        if not self._staged:
+            return
+        staged, self._staged = self._staged, {}
+        self._staged_n = 0
+        unchecked, self._staged_unchecked = self._staged_unchecked, False
+        names = sorted(staged)
+        batches = [staged[n][0] if len(staged[n]) == 1
+                   else np.concatenate(staged[n]) for n in names]
+        self.ingest_batch(names, batches, _nan_checked=not unchecked)
+
     # -- fold (Quancurrent-style worker buffers) -----------------------------
 
     def local_buffer(self) -> "QuantileService":
         """A private worker-side buffer with this service's configuration —
-        ingest into it contention-free, then ``fold`` it back in."""
+        ingest (or ``stage``) into it contention-free, then ``fold`` it
+        back in."""
         return QuantileService(eps=self.eps, budget=self.budget,
                                dtype=self.dtype, fused=self.fused,
                                check_nans=self.check_nans,
                                backend=self.backend)
 
+    def _validate_fold(self, other: "QuantileService") -> None:
+        """A buffer folds in only if the FULL sketch/engine config matches.
+        budget/dtype mismatches corrupt the merge outright; an ``eps``
+        mismatch is subtler — cap sizing (``grouped``) and the claimed
+        rank bound follow self.eps, so silently folding a coarser buffer
+        would under-size caps and over-claim precision; ``fused``/
+        ``backend`` steer data movement only, but a mismatch means the
+        buffer was not made by ``local_buffer()`` and the caller's intent
+        is ambiguous — reject loudly rather than guess."""
+        mismatched = [
+            f"{field}: {theirs!r} vs {ours!r}"
+            for field, theirs, ours in [
+                ("budget", other.budget, self.budget),
+                ("dtype", other.dtype, self.dtype),
+                ("eps", other.eps, self.eps),
+                ("fused", bool(other.fused), bool(self.fused)),
+                ("backend", other.backend, self.backend),
+            ] if theirs != ours]
+        if mismatched:
+            raise ValueError("cannot fold: config mismatch "
+                             "(" + "; ".join(mismatched) + ")")
+
     def fold(self, other: "QuantileService") -> None:
-        """Fold a worker's local buffer into this service: ONE batched
-        ``sketch_merge_batch`` dispatch aligns the buffers' streams onto
+        """Fold one worker buffer into this service: ONE batched
+        ``sketch_merge_batch`` dispatch aligns the buffer's streams onto
         our slots (slack composes by max under merge, so warm answers stay
-        exact), and the buffer's tick ring is re-slotted host-side."""
-        if other.budget != self.budget or other.dtype != self.dtype:
-            raise ValueError(
-                f"cannot fold: budget/dtype mismatch "
-                f"({other.budget},{other.dtype}) vs "
-                f"({self.budget},{self.dtype})")
-        names = sorted(other._names)
-        if names:
-            my_slots = self._ensure_slots(names)
-            their_slots = np.asarray([other._names[n] for n in names],
-                                     dtype=np.int32)
-            self._stacked = _merge_rows(self._stacked,
-                                        jnp.asarray(my_slots),
-                                        other._stacked,
-                                        jnp.asarray(their_slots))
+        exact), and the buffer's tick ring is re-slotted host-side.
+        ``fold_many`` is the K-buffer generalization."""
+        self.fold_many([other])
+
+    @_locked("w")
+    def fold_many(self, others: Sequence["QuantileService"]) -> None:
+        """Fold SEVERAL worker buffers at once — the fold scheduler's batch
+        step (DESIGN.md §10).  Device cost is one fold, not K: all staged
+        host batches across the buffers land as ONE batched ingest tick
+        (per-stream concatenation), and all materialized slot rows land in
+        ONE ``sketch_merge_many`` dispatch.  Buffers must be quiescent
+        (handed off — no concurrent writers); fold order only shapes the
+        approximate summary, never ``exact*`` answers, which are
+        order-invariant.  The buffers are left drained of staged data but
+        otherwise untouched."""
+        others = [o for o in others if o is not self]
+        for other in others:
+            self._validate_fold(other)
+
+        # 1. staged host data: one batched tick for everything -------------
+        staged: Dict[str, List[np.ndarray]] = {}
+        unchecked = False
+        for other in others:
+            if not other._staged:
+                continue
+            for name, arrs in other._staged.items():
+                staged.setdefault(name, []).extend(arrs)
+            unchecked |= other._staged_unchecked
+            other._staged = {}
+            other._staged_n = 0
+            other._staged_unchecked = False
+        if staged:
+            names = sorted(staged)
+            batches = [staged[n][0] if len(staged[n]) == 1
+                       else np.concatenate(staged[n]) for n in names]
+            self.ingest_batch(names, batches, _nan_checked=not unchecked)
+
+        # 2. materialized slot rows: one sketch_merge_many dispatch --------
+        tabled = [o for o in others if o._names and o._stacked is not None]
+        if tabled:
+            union = sorted({n for o in tabled for n in o._names})
+            my_slots = self._ensure_slots(union)
+            tables = tuple(o._stacked for o in tabled)
+            idxs = tuple(
+                jnp.asarray([o._names.get(n, -1) for n in union],
+                            dtype=jnp.int32)
+                for o in tabled)
+            self._stacked = _fold_many_fn(len(tabled))(
+                self._stacked, jnp.asarray(my_slots), tables, idxs)
             record_ingest_dispatch()
-            remap = {int(t): int(m)
-                     for t, m in zip(their_slots, my_slots)}
-            for t, m in remap.items():
-                self._counts[m] += other._counts[t]
-            for rec in other._ring:
-                new_slots = np.asarray(
-                    [remap.get(int(s), -1) for s in rec.slots],
-                    dtype=np.int32)
-                if (new_slots >= 0).any():
-                    self._ring.append(_TickRecord(
-                        data=rec.data, slots=new_slots,
-                        n_valid=rec.n_valid.copy()))
-        for name, gs in other._grouped.items():
-            mine = self._grouped.setdefault(name, _GroupedStream([], [], 0))
-            mine.chunks.extend(gs.chunks)
-            mine.key_chunks.extend(gs.key_chunks)
-            mine.n += gs.n
+            slot_of = {n: int(m) for n, m in zip(union, my_slots)}
+            for o in tabled:
+                remap = {int(t): slot_of[n] for n, t in o._names.items()}
+                for t, m in remap.items():
+                    self._counts[m] += o._counts[t]
+                for rec in o._ring:
+                    new_slots = np.asarray(
+                        [remap.get(int(s), -1) for s in rec.slots],
+                        dtype=np.int32)
+                    if (new_slots >= 0).any():
+                        self._ring.append(_TickRecord(
+                            data=rec.data, slots=new_slots,
+                            n_valid=rec.n_valid.copy()))
+
+        # 3. grouped streams: host-side adoption ---------------------------
+        for other in others:
+            for name, gs in other._grouped.items():
+                mine = self._grouped.setdefault(name,
+                                                _GroupedStream([], [], 0))
+                mine.chunks.extend(gs.chunks)
+                mine.key_chunks.extend(gs.key_chunks)
+                mine.n += gs.n
 
     # -- queries ------------------------------------------------------------
 
@@ -598,6 +883,7 @@ class QuantileService:
             raise ValueError(f"stream {name!r} is empty")
         return slot
 
+    @_query
     def approx(self, name: str, q: float):
         """Approximate q-quantile from the sketch alone: O(s), zero passes
         over the data; rank error <= ``rank_bound(name)``."""
@@ -605,6 +891,7 @@ class QuantileService:
         k = local_ops.target_rank(self._counts[slot], q)
         return _query_jit(self._row_state(slot), k)
 
+    @_query
     def exact(self, name: str, q: float, *, warm: bool = True):
         """EXACT q-quantile of everything ingested so far.
 
@@ -630,6 +917,7 @@ class QuantileService:
         cap = min(n, _round_up(bound + 2, 128))
         return self._count_extract_resolve(chunks, n, k, pivot, cap)
 
+    @_query
     def exact_all(self, qs):
         """EXACT quantiles at every level in ``qs`` for EVERY non-empty
         stream — ONE fused job through the grouped engine instead of a
@@ -676,6 +964,7 @@ class QuantileService:
                                         G, Q, n_max)
         return {name: out[g] for g, (name, _) in enumerate(active)}
 
+    @_query
     def grouped(self, name: str, qs, num_groups: int):
         """EXACT quantiles at every level in ``qs`` for ALL ``num_groups``
         group ids over everything ``ingest_grouped`` buffered — ONE job for
@@ -860,6 +1149,7 @@ class QuantileService:
 
     # -- snapshot / restore -------------------------------------------------
 
+    @_locked("w")
     def snapshot(self):
         """Capture the full service state as ``(leaves, extra)``:
 
@@ -872,7 +1162,11 @@ class QuantileService:
 
         ``checkpoint.save_service_snapshot`` persists this pair;
         ``from_snapshot`` inverts it bit-exactly — a restored service's
-        warm ``exact()`` answers match without replaying any history."""
+        warm ``exact()`` answers match without replaying any history.
+        Staged host batches are committed first, so a snapshot never
+        silently drops in-flight values."""
+        if self._staged:
+            self.commit_staged()
         leaves: List = []
         if self._stacked is not None:
             leaves.extend([self._stacked.values, self._stacked.weights,
@@ -951,12 +1245,30 @@ class StreamingCalibrator:
     exactly with a WARM 2-action query (``scale``) — no sketch-phase sort
     ever happens at scale-query time.  ``observe_many`` batches ALL of a
     decode step's tensors into ONE device tick (the slot-table ingest), so
-    per-step calibration overhead stays constant in the tensor count."""
+    per-step calibration overhead stays constant in the tensor count.
+
+    ``ingest_threads`` > 0 opts into the threaded ingest pipeline
+    (``ingest_pool.IngestPool``): ``observe_many`` becomes a queue hand-
+    off so calibration stops stealing decode-loop time, ``scale()``
+    flushes first (still exact up to now), and ``approx_scale`` reads
+    the folded state without a barrier — stale by at most the pool's
+    ``lag_values()``.  ``None`` reads ``REPRO_INGEST_THREADS`` (default
+    0 = synchronous).  Call ``close()`` (or use as a context manager)
+    when threaded."""
 
     def __init__(self, q: float = 0.999, *, eps: float = 0.01,
-                 fused: bool = False, backend=None):
+                 fused: bool = False, backend=None,
+                 ingest_threads: Optional[int] = None):
         self.q = q
         self.service = QuantileService(eps=eps, fused=fused, backend=backend)
+        if ingest_threads is None:
+            from .ingest_pool import default_ingest_workers
+            ingest_threads = (default_ingest_workers()
+                              if "REPRO_INGEST_THREADS" in os.environ else 0)
+        self.pool = None
+        if ingest_threads:
+            from .ingest_pool import IngestPool
+            self.pool = IngestPool(self.service, workers=ingest_threads)
 
     def observe(self, name: str, activations) -> None:
         self.observe_many({name: activations})
@@ -964,8 +1276,14 @@ class StreamingCalibrator:
     def observe_many(self, named: Dict[str, jax.typing.ArrayLike]) -> None:
         """Fold one decode step's activations — every tensor at once — into
         the per-tensor streams: ONE batched device call regardless of how
-        many tensors the step observed (|x| in f32 applied on device)."""
+        many tensors the step observed (|x| in f32 applied on device).
+        Threaded mode queues the tensors instead (|x| applied host-side
+        in the worker thread, bit-identical) and returns immediately."""
         if not named:
+            return
+        if self.pool is not None:
+            for n in sorted(named):
+                self.pool.submit(n, named[n], transform="abs_f32")
             return
         names = sorted(named)
         self.service.ingest_batch(names, [named[n] for n in names],
@@ -973,13 +1291,41 @@ class StreamingCalibrator:
 
     def scale(self, name: str):
         """Exact symmetric int8 scale (the paper's reproducibility case):
-        warm GK Select over everything observed so far."""
+        warm GK Select over everything observed so far.  Threaded mode
+        flushes the pool first, so 'so far' includes every queued step."""
+        self.flush()
         return self.service.exact(name, self.q)
 
     def approx_scale(self, name: str):
         """O(s) scale estimate from the sketch alone (rank error within
-        ``service.rank_bound(name)``) — for per-step monitoring."""
+        ``service.rank_bound(name)``) — for per-step monitoring.  In
+        threaded mode this does NOT flush: it reads the folded state,
+        stale by at most ``pool.lag_values()`` queued values."""
         return self.service.approx(name, self.q)
 
     def observed(self, name: str) -> int:
+        """Values folded for ``name`` (flushes first in threaded mode so
+        the count covers every queued observation)."""
+        self.flush()
         return self.service.stream_count(name)
+
+    def flush(self) -> None:
+        """Barrier for threaded mode (no-op when synchronous)."""
+        if self.pool is not None:
+            self.pool.flush()
+
+    def close(self) -> None:
+        """Stop the ingest pool, folding everything queued (no-op when
+        synchronous).  Idempotent."""
+        if self.pool is not None:
+            self.pool.close()
+
+    def __enter__(self) -> "StreamingCalibrator":
+        return self
+
+    def __exit__(self, exc_type, exc, tb) -> None:
+        try:
+            self.close()
+        except BaseException:
+            if exc_type is None:
+                raise

@@ -12,9 +12,16 @@ Calibration comes in two shapes:
     the sketch phase (the full sort) is never re-paid per query
     (DESIGN.md §6).
 
+Streaming calibration has an opt-in THREADED mode (``--ingest-threads N``
+or ``REPRO_INGEST_THREADS``): observations hand off to an
+``launch.ingest_pool.IngestPool`` instead of running a device tick inside
+the decode loop, so calibration stops stealing decode time; ``scale()``
+flushes the pool first and stays exact (DESIGN.md §10).
+
 Usage:
   PYTHONPATH=src python -m repro.launch.serve --arch mamba2-1.3b --reduced \
-      --prompt-len 32 --gen-len 16 --batch 4 [--calibrate]
+      --prompt-len 32 --gen-len 16 --batch 4 [--calibrate] \
+      [--ingest-threads 4]
 """
 from __future__ import annotations
 
@@ -72,7 +79,10 @@ def generate(cfg: ModelConfig, params, prompts: jax.Array, *,
     replacement for capturing an activation history and re-sketching it per
     calibration query.  All of a step's observed tensors go through
     ``observe_many`` as ONE batched service tick (one device dispatch per
-    step however many tensors are watched)."""
+    step however many tensors are watched).  When the calibrator was built
+    with ``ingest_threads > 0``, ``observe_many`` is a queue handoff
+    instead — the decode loop never blocks on calibration device work, and
+    the observations fold in epoch batches on the pool's fold thread."""
     B, S = prompts.shape
     batch = {"tokens": prompts}
     if extras:
@@ -112,6 +122,10 @@ def main() -> None:
     ap.add_argument("--calibrate", action="store_true",
                     help="maintain a running logits sketch across decode "
                          "steps and report the exact (warm) int8 scale")
+    ap.add_argument("--ingest-threads", type=int, default=None,
+                    help="threaded calibration ingest: worker count for the "
+                         "IngestPool (default: REPRO_INGEST_THREADS env var, "
+                         "else 0 = synchronous)")
     args = ap.parse_args()
 
     cfg = get_config(args.arch)
@@ -128,7 +142,9 @@ def main() -> None:
         extras["frames"] = jnp.zeros(
             (args.batch, max(1, args.prompt_len // cfg.enc_seq_divisor),
              cfg.d_model), jnp.float32)
-    calibrator = StreamingCalibrator(q=0.999) if args.calibrate else None
+    calibrator = (StreamingCalibrator(q=0.999,
+                                      ingest_threads=args.ingest_threads)
+                  if args.calibrate else None)
     t0 = time.time()
     toks = generate(cfg, params, prompts, gen_len=args.gen_len, extras=extras,
                     calibrator=calibrator)
@@ -137,10 +153,14 @@ def main() -> None:
           f"({args.batch * args.gen_len / dt:.1f} tok/s)")
     print(np.asarray(toks[:2, :8]))
     if calibrator is not None:
-        print(f"streaming calibration: {calibrator.observed('logits')} "
+        mode = (f"threaded x{calibrator.pool.workers}"
+                if calibrator.pool is not None else "synchronous")
+        print(f"streaming calibration ({mode}): "
+              f"{calibrator.observed('logits')} "
               f"|logit| samples, exact p99.9 scale (warm) = "
               f"{float(calibrator.scale('logits')):.6f} "
               f"(approx O(s) = {float(calibrator.approx_scale('logits')):.6f})")
+        calibrator.close()
 
 
 if __name__ == "__main__":

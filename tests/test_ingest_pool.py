@@ -1,0 +1,404 @@
+"""Threaded ingest pipeline (ISSUE 9): IngestPool parity after flush vs
+serial ingest, the flush barrier and staleness accounting, error
+propagation and shutdown, host-side staging parity, atomic counters under
+thread contention, fold_many batching, and the concurrent
+ingest+fold+query stress test (slot recycling and ``_grow`` included).
+
+Exact answers are rank selection on a multiset, so ANY interleaving of
+the same batches must produce bit-identical ``exact``/``exact_all``
+results — that is the determinism every parity assert here leans on.
+"""
+import os
+import threading
+import time
+
+import numpy as np
+import pytest
+
+from repro.core import (record_sketch_sort, reset_sketch_sorts,
+                        sketch_sorts)
+from repro.kernels import ops as kernel_ops
+from repro.launch import (IngestPool, QuantileService, StreamingCalibrator,
+                          default_ingest_workers)
+from repro.launch.quantile_service import (ingest_dispatches,
+                                           record_ingest_dispatch,
+                                           reset_ingest_dispatches)
+
+EPS, BUDGET = 0.05, 64
+QS = (0.1, 0.5, 0.99)
+
+
+def _mk(**kw):
+    kw.setdefault("eps", EPS)
+    kw.setdefault("budget", BUDGET)
+    return QuantileService(**kw)
+
+
+def _batches(seed, n_streams=4, n_batches=24, size=128):
+    rng = np.random.default_rng(seed)
+    return [(f"s{i % n_streams}",
+             rng.normal(size=size).astype(np.float32))
+            for i in range(n_batches)]
+
+
+def _serial(batches, **kw):
+    svc = _mk(**kw)
+    for name, b in batches:
+        svc.ingest_batch([name], [b])
+    return svc
+
+
+def _assert_parity(got_svc, ref_svc):
+    names = sorted(ref_svc.streams())
+    assert sorted(got_svc.streams()) == names
+    got = got_svc.exact_all(QS)
+    want = ref_svc.exact_all(QS)
+    for n in names:
+        assert got_svc.stream_count(n) == ref_svc.stream_count(n)
+        assert (np.asarray(got[n]).tobytes()
+                == np.asarray(want[n]).tobytes()), n
+
+
+class TestPoolParity:
+    def test_flush_then_exact_is_bit_identical_to_serial(self):
+        batches = _batches(0)
+        svc = _mk()
+        with IngestPool(svc, workers=4, epoch_values=512) as pool:
+            for name, b in batches:
+                pool.submit(name, b)
+            pool.flush(timeout=120)
+            assert pool.lag_values() == 0
+            _assert_parity(svc, _serial(batches))
+
+    def test_close_drains_without_explicit_flush(self):
+        batches = _batches(1)
+        svc = _mk()
+        pool = IngestPool(svc, workers=2, epoch_values=10 ** 6)
+        for name, b in batches:
+            pool.submit(name, b)
+        pool.close()          # everything queued must fold on close
+        _assert_parity(svc, _serial(batches))
+
+    def test_transform_matches_synchronous_device_path(self):
+        rng = np.random.default_rng(2)
+        chunks = [rng.normal(size=200).astype(np.float64) for _ in range(8)]
+        sync = _mk()
+        for c in chunks:
+            sync.ingest_batch(["t"], [c], transform="abs_f32")
+        svc = _mk()
+        with IngestPool(svc, workers=3, epoch_values=512) as pool:
+            for c in chunks:
+                pool.submit("t", c, transform="abs_f32")
+            pool.flush(timeout=120)
+            _assert_parity(svc, sync)
+
+    def test_fold_many_merges_materialized_tables(self):
+        """K>1 buffers with MATERIALIZED slot tables (direct ingest, not
+        staging) and disjoint/overlapping stream sets: the batched
+        ``sketch_merge_many`` path must match a serial replay, including
+        streams missing from some buffers (empty-row alignment)."""
+        rng = np.random.default_rng(9)
+        a = rng.normal(size=300).astype(np.float32)
+        b = rng.normal(size=300).astype(np.float32)
+        c = rng.normal(size=300).astype(np.float32)
+        svc = _mk()
+        b1, b2 = svc.local_buffer(), svc.local_buffer()
+        b1.ingest_batch(["a", "b"], [a[:150], b])       # b only in b1
+        b2.ingest_batch(["a", "c"], [a[150:], c])       # c only in b2
+        b2.stage("a", a[:0])                            # mixed: empty stage
+        svc.fold_many([b1, b2])
+        ref = _mk()
+        ref.ingest_batch(["a", "b", "c"], [a, b, c])
+        _assert_parity(svc, ref)
+
+    def test_fold_many_matches_sequential_folds(self):
+        batches = _batches(3)
+        many, seq = _mk(), _mk()
+        bufs_m = [many.local_buffer() for _ in range(3)]
+        bufs_s = [seq.local_buffer() for _ in range(3)]
+        for i, (name, b) in enumerate(batches):
+            bufs_m[i % 3].stage(name, b)
+            bufs_s[i % 3].stage(name, b)
+        many.fold_many(bufs_m)
+        for buf in bufs_s:
+            seq.fold(buf)
+        _assert_parity(many, seq)
+        _assert_parity(many, _serial(batches))
+
+
+class TestBarrierAndStaleness:
+    def test_values_invisible_before_flush_visible_after(self):
+        svc = _mk()
+        pool = IngestPool(svc, workers=1, epoch_values=10 ** 6)
+        try:
+            arr = np.arange(100, dtype=np.float32)
+            pool.submit("x", arr)
+            deadline = time.monotonic() + 60
+            while pool.lag_values() and time.monotonic() < deadline:
+                time.sleep(0.01)   # queued but below the epoch threshold:
+            assert pool.lag_values() == 100   # staged, not folded
+            pool.flush(timeout=120)
+            assert pool.lag_values() == 0
+            assert svc.stream_count("x") == 100
+        finally:
+            pool.close()
+
+    def test_stats_account_every_value(self):
+        batches = _batches(4, n_batches=16)
+        svc = _mk()
+        with IngestPool(svc, workers=4, epoch_values=256,
+                        fold_batch=4) as pool:
+            for name, b in batches:
+                pool.submit(name, b)
+            pool.flush(timeout=120)
+            stats = pool.stats()
+        total = sum(b.size for _, b in batches)
+        assert stats["submitted_values"] == total
+        assert stats["folded_values"] == total
+        assert stats["lag_values"] == 0
+        assert stats["max_lag_values"] <= total
+        assert stats["folds"] >= 1
+        assert stats["buffers_folded"] >= stats["folds"]
+
+    def test_flush_timeout_is_a_timeout_not_a_hang(self):
+        svc = _mk()
+        with IngestPool(svc, workers=1, epoch_values=10 ** 6) as pool:
+            pool.flush(timeout=5)    # nothing pending: returns immediately
+
+
+class TestErrorsAndShutdown:
+    def test_nan_error_propagates_on_flush(self):
+        svc = _mk()
+        pool = IngestPool(svc, workers=2, epoch_values=10 ** 6)
+        pool.submit("x", np.array([1.0, np.nan], dtype=np.float32))
+        with pytest.raises(ValueError, match="NaN"):
+            pool.flush(timeout=120)
+        with pytest.raises(ValueError, match="NaN"):
+            pool.close()
+
+    def test_error_does_not_deadlock_flush_accounting(self):
+        svc = _mk()
+        pool = IngestPool(svc, workers=1, epoch_values=10 ** 6)
+        pool.submit("ok", np.ones(50, dtype=np.float32))
+        pool.submit("bad", np.array([np.nan], dtype=np.float32))
+        pool.submit("after", np.ones(30, dtype=np.float32))
+        with pytest.raises(ValueError, match="NaN"):
+            pool.flush(timeout=120)   # must raise, not hang on lost values
+
+    def test_submit_after_close_raises(self):
+        svc = _mk()
+        pool = IngestPool(svc, workers=1)
+        pool.close()
+        pool.close()                  # idempotent
+        with pytest.raises(RuntimeError, match="closed"):
+            pool.submit("x", np.ones(4, dtype=np.float32))
+
+    def test_context_manager_closes(self):
+        svc = _mk()
+        with IngestPool(svc, workers=1, epoch_values=10 ** 6) as pool:
+            pool.submit("x", np.ones(8, dtype=np.float32))
+        assert svc.stream_count("x") == 8
+        with pytest.raises(RuntimeError, match="closed"):
+            pool.submit("x", np.ones(4, dtype=np.float32))
+
+    def test_default_workers_env(self, monkeypatch):
+        monkeypatch.setenv("REPRO_INGEST_THREADS", "3")
+        assert default_ingest_workers() == 3
+        pool = IngestPool(_mk())
+        assert pool.workers == 3
+        pool.close()
+        monkeypatch.delenv("REPRO_INGEST_THREADS")
+        assert default_ingest_workers() == min(4, os.cpu_count() or 1)
+        monkeypatch.setenv("REPRO_INGEST_THREADS", "-1")
+        with pytest.raises(ValueError):
+            default_ingest_workers()
+
+
+class TestStagingAPI:
+    def test_stage_commit_bit_identical_to_ingest(self):
+        batches = _batches(5, n_batches=12)
+        staged, direct = _mk(), _mk()
+        for name, b in batches:
+            staged.stage(name, b)
+            direct.ingest_batch([name], [b])
+        assert staged.staged_count == sum(b.size for _, b in batches)
+        staged.commit_staged()
+        assert staged.staged_count == 0
+        _assert_parity(staged, direct)
+
+    def test_queries_auto_commit_staged(self):
+        svc = _mk()
+        svc.stage("x", np.arange(64, dtype=np.float32))
+        assert svc.staged_count == 64
+        svc.exact("x", 0.5)           # auto-commit before the read lock
+        assert svc.staged_count == 0
+        assert svc.stream_count("x") == 64
+
+    def test_stage_rejects_nan(self):
+        svc = _mk()
+        with pytest.raises(ValueError, match="NaN"):
+            svc.stage("x", np.array([np.nan], dtype=np.float32))
+
+    def test_snapshot_commits_staged(self):
+        svc = _mk()
+        svc.stage("x", np.arange(32, dtype=np.float32))
+        svc.snapshot()
+        assert svc.staged_count == 0
+        assert svc.stream_count("x") == 32
+
+
+class TestThreadedCalibrator:
+    def test_threaded_scale_matches_synchronous(self):
+        rng = np.random.default_rng(8)
+        steps = [rng.normal(size=(2, 48)).astype(np.float32)
+                 for _ in range(10)]
+        sync = StreamingCalibrator(q=0.99, eps=EPS)
+        for s in steps:
+            sync.observe("logits", s)
+        with StreamingCalibrator(q=0.99, eps=EPS, ingest_threads=2) as thr:
+            assert thr.pool is not None
+            for s in steps:
+                thr.observe("logits", s)
+            assert thr.observed("logits") == sync.observed("logits")
+            assert (np.asarray(thr.scale("logits")).tobytes()
+                    == np.asarray(sync.scale("logits")).tobytes())
+            thr.approx_scale("logits")   # barrier-free path stays queryable
+
+    def test_zero_threads_means_synchronous(self):
+        cal = StreamingCalibrator(ingest_threads=0)
+        assert cal.pool is None
+        cal.close()                       # no-op, but must not raise
+
+
+class TestAtomicCounters:
+    def test_counters_do_not_drop_ticks_under_threads(self):
+        reset_ingest_dispatches()
+        reset_sketch_sorts()
+        kernel_ops.reset_hbm_passes()
+        per_thread, n_threads = 200, 8
+        barrier = threading.Barrier(n_threads)
+
+        def hammer():
+            barrier.wait()
+            for _ in range(per_thread):
+                record_ingest_dispatch()
+                record_sketch_sort()
+                kernel_ops._tick()
+        ts = [threading.Thread(target=hammer) for _ in range(n_threads)]
+        for t in ts:
+            t.start()
+        for t in ts:
+            t.join()
+        want = per_thread * n_threads
+        assert ingest_dispatches() == want
+        assert sketch_sorts() == want
+        assert kernel_ops.hbm_passes() == want
+        reset_ingest_dispatches()
+        reset_sketch_sorts()
+        kernel_ops.reset_hbm_passes()
+
+
+class TestThreadedStress:
+    def test_concurrent_ingest_fold_query_bit_identical(self):
+        """N producer threads + a query thread against one pool; after
+        flush the state is bit-identical to serial ingest of the same
+        batches — including capacity growth (``_grow``) from many streams
+        and slot recycling racing the folds."""
+        n_producers = 4
+        rng = np.random.default_rng(6)
+        plans = [
+            [(f"p{t}_{i % 6}", rng.normal(size=96).astype(np.float32))
+             for i in range(18)]
+            for t in range(n_producers)]
+        svc = _mk()
+        # churn slots so folds land on a recycled, re-grown table
+        for i in range(12):
+            svc.ingest(f"tmp{i}", np.ones(8, dtype=np.float32))
+        for i in range(12):
+            svc.drop_stream(f"tmp{i}")
+
+        pool = IngestPool(svc, workers=n_producers, epoch_values=384,
+                          queue_depth=8)
+        errs = []
+        stop = threading.Event()
+
+        def producer(plan):
+            try:
+                for name, b in plan:
+                    pool.submit(name, b)
+            except Exception as e:     # pragma: no cover - failure path
+                errs.append(e)
+
+        def reader():
+            try:
+                while not stop.is_set():
+                    for n in list(svc.streams())[:4]:
+                        try:
+                            svc.approx(n, 0.5)
+                            svc.exact(n, 0.5)
+                        except ValueError:
+                            pass       # stream emptied/renamed mid-read
+            except Exception as e:     # pragma: no cover - failure path
+                errs.append(e)
+
+        threads = [threading.Thread(target=producer, args=(p,))
+                   for p in plans]
+        threads.append(threading.Thread(target=reader))
+        for t in threads:
+            t.start()
+        for t in threads[:-1]:
+            t.join()
+        pool.flush(timeout=300)
+        stop.set()
+        threads[-1].join()
+        pool.close()
+        assert not errs, errs
+
+        ref = _mk()
+        for i in range(12):
+            ref.ingest(f"tmp{i}", np.ones(8, dtype=np.float32))
+        for i in range(12):
+            ref.drop_stream(f"tmp{i}")
+        for plan in plans:
+            for name, b in plan:
+                ref.ingest_batch([name], [b])
+        _assert_parity(svc, ref)
+
+    def test_direct_concurrent_ingest_with_grow_and_recycle(self):
+        """Raw service thread-safety (no pool): concurrent ingest_batch,
+        drop_stream and queries from N threads; final per-stream counts
+        and exact answers match a serial replay."""
+        n_threads = 4
+        rng = np.random.default_rng(7)
+        plans = [
+            [(f"d{t}_{i % 10}", rng.normal(size=64).astype(np.float32))
+             for i in range(20)]
+            for t in range(n_threads)]
+        svc = _mk()
+        errs = []
+
+        def worker(t, plan):
+            try:
+                for j, (name, b) in enumerate(plan):
+                    svc.ingest_batch([name], [b])
+                    if j % 7 == 3:     # churn: register + drop extra slots
+                        svc.ingest(f"x{t}_{j}", np.ones(4, dtype=np.float32))
+                        svc.drop_stream(f"x{t}_{j}")
+                    if j % 5 == 2:
+                        svc.exact(name, 0.5)
+            except Exception as e:     # pragma: no cover - failure path
+                errs.append(e)
+
+        threads = [threading.Thread(target=worker, args=(t, p))
+                   for t, p in enumerate(plans)]
+        for t in threads:
+            t.start()
+        for t in threads:
+            t.join()
+        assert not errs, errs
+
+        ref = _mk()
+        for plan in plans:
+            for name, b in plan:
+                ref.ingest_batch([name], [b])
+        _assert_parity(svc, ref)

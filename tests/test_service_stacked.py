@@ -193,8 +193,15 @@ class TestFold:
                         == np.asarray(ref.exact(n, q)).tobytes())
 
     def test_fold_rejects_mismatched_config(self):
-        with pytest.raises(ValueError, match="budget/dtype"):
-            QuantileService(budget=64).fold(QuantileService(budget=128))
+        base = dict(budget=64, eps=0.05)
+        mismatches = [
+            dict(base, budget=128),
+            dict(base, eps=0.01),          # would corrupt cap sizing
+            dict(base, fused=not QuantileService(**base).fused),
+        ]
+        for kwargs in mismatches:
+            with pytest.raises(ValueError, match="config mismatch"):
+                QuantileService(**base).fold(QuantileService(**kwargs))
 
 
 class TestSlotTableLifecycle:
