@@ -32,6 +32,9 @@ per W and the timed reps measure steady state, not retraces.  Reported:
 aggregate vals/s and the fold-lag staleness (``max_lag_values``); asserted:
 ``exact_all`` after ``flush()`` bit-identical to a single-threaded ingest
 of the same batches, and >= 2x vals/s at W=4 vs W=1.
+
+The sliding-window query axis (windowed exactness + bounded-memory
+assertions, DESIGN.md §11) lives in ``bench_windowed``.
 """
 import os
 import time

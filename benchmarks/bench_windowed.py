@@ -1,0 +1,74 @@
+"""Windowed-query axis: sliding-window exact quantiles (DESIGN.md §11).
+
+Two claims the windowed design makes, both asserted here (not just timed):
+
+  * exactness — ``windowed(name, q, window=w)`` is bit-identical to the
+    numpy oracle (sort of the raw last-w-ticks population) at every
+    measured window width, and the warm windowed query dispatches ZERO
+    sketch-phase sorts (``core.sketch.sketch_sorts``): the pivot comes
+    from merging the parked sub-window sketch rows, never from re-sorting
+    retained data.
+  * bounded memory — the resident footprint (tick-ring lanes + slot-table
+    rows, ``memory_stats()["resident_values"]``) is a function of the
+    window configuration only: after 2x-window and 8x-window histories it
+    is IDENTICAL, and the ring never holds more than ``window_ticks``
+    records.  History length buys nothing and costs nothing.
+
+Reported per window width w: warm windowed-query us/call and the decayed
+approx us/call, plus the resident-values footprint as the derived column.
+"""
+import os
+
+import numpy as np
+
+from repro.core import reset_sketch_sorts, sketch_sorts
+from repro.launch import QuantileService
+
+from benchmarks.bench_service import timed
+
+
+def run(csv_rows):
+    smoke = os.environ.get("REPRO_BENCH_SMOKE", "0") == "1"
+    n_tick = 2 ** 9 if smoke else 2 ** 13
+    window_ticks = 16 if smoke else 64
+    widths = (4, 16) if smoke else (4, 16, 64)
+    q = 0.99
+    rng = np.random.default_rng(0)
+
+    def fill(history_ticks):
+        svc = QuantileService(eps=0.01, window_ticks=window_ticks,
+                              window_subs=8)
+        feed = []
+        for _ in range(history_ticks):
+            c = rng.normal(size=n_tick).astype(np.float32)
+            svc.ingest("bench", c)
+            feed.append(c)
+        return svc, feed
+
+    # ---- bounded memory: footprint is flat in history length -------------
+    svc_short, _ = fill(2 * window_ticks)
+    svc, feed = fill(8 * window_ticks)
+    short, long = svc_short.memory_stats(), svc.memory_stats()
+    assert short["resident_values"] == long["resident_values"], (short, long)
+    assert long["ring_records"] <= window_ticks, long
+    csv_rows.append(("windowed/resident_values", "0",
+                     f"{long['resident_values']}@8x=={short['resident_values']}@2x_history"))
+
+    for w in widths:
+        # ---- exactness: bit-identical to the raw-window oracle -----------
+        vals = np.sort(np.concatenate(feed[-w:]))
+        k = min(vals.size, max(1, int(np.ceil(q * vals.size))))
+        want = vals[k - 1]
+        reset_sketch_sorts()
+        got = np.asarray(svc.windowed("bench", q, window=w))
+        warm_sorts = sketch_sorts()
+        assert got.tobytes() == want.tobytes(), (w, got, want)
+        assert warm_sorts == 0, f"warm windowed query sorted ({warm_sorts})"
+
+        us = timed(lambda: svc.windowed("bench", q, window=w))
+        csv_rows.append((f"windowed/query_w{w}", f"{us:.1f}",
+                         f"n_w={vals.size},sorts=0,bit_exact"))
+
+    us = timed(lambda: svc.approx_decayed("bench", q, halflife=window_ticks / 4))
+    csv_rows.append(("windowed/approx_decayed", f"{us:.1f}",
+                     f"halflife={window_ticks / 4:g}ticks"))

@@ -23,7 +23,8 @@ sys.path.insert(0, os.path.join(_REPO, "src"))  # `repro` package
 
 from benchmarks import (bench_scaling, bench_distributions, bench_complexity,
                         bench_rounds, bench_roofline, bench_fused,
-                        bench_multi, bench_service, bench_grouped)
+                        bench_multi, bench_service, bench_grouped,
+                        bench_windowed)
 
 MODULES = [
     ("fig1_2_scaling", bench_scaling),
@@ -35,6 +36,7 @@ MODULES = [
     ("multi", bench_multi),
     ("service", bench_service),
     ("grouped", bench_grouped),
+    ("windowed", bench_windowed),
 ]
 
 # smoke: only the modules that honour REPRO_BENCH_SMOKE sizing and finish
@@ -45,6 +47,7 @@ SMOKE_MODULES = [
     ("multi", bench_multi),
     ("service", bench_service),
     ("grouped", bench_grouped),
+    ("windowed", bench_windowed),
 ]
 
 

@@ -17,7 +17,12 @@ Service snapshots (DESIGN.md §9): ``save_service_snapshot`` /
 table + tick ring through the same atomic ``step_<N>`` layout (flat leaf
 list + JSON metadata, rebuilt templateless via ``restore_checkpoint_flat``),
 so a restarted — or preempted-and-resumed — service answers warm ``exact()``
-queries bit-identically with zero history replay.
+queries bit-identically with zero history replay.  Window state (DESIGN.md
+§11: tick clock, per-record tick stamps, retained counts, parked sub-window
+rows) rides the same snapshot as format-2 ``extra`` keys — a restored
+windowed service answers ``windowed()``/``approx_decayed()`` bit-identically
+and keeps rotating/retiring sub-windows exactly where the saved one left
+off; format-1 snapshots (pre-window) restore as unwindowed services.
 """
 from __future__ import annotations
 

@@ -19,6 +19,7 @@ from .sketch import (GKSketch, merge_fold_left, merge_tree,
                      sketch_merge, sketch_query_rank, sketch_rank_bound,
                      sketch_update_padded, sketch_update_batch,
                      sketch_merge_batch, sketch_merge_many,
+                     sketch_merge_rows, sketch_query_decayed,
                      sketch_stack, sketch_unstack,
                      sketch_init_stack, sketch_query_rank_batch,
                      sketch_rank_bound_batch,
@@ -43,7 +44,7 @@ __all__ = [
     "SketchState", "sketch_budget", "sketch_init", "sketch_update",
     "sketch_merge", "sketch_query_rank", "sketch_rank_bound",
     "sketch_update_padded", "sketch_update_batch", "sketch_merge_batch",
-    "sketch_merge_many",
+    "sketch_merge_many", "sketch_merge_rows", "sketch_query_decayed",
     "sketch_stack", "sketch_unstack", "sketch_init_stack",
     "sketch_query_rank_batch", "sketch_rank_bound_batch",
     "reset_sketch_sorts", "sketch_sorts", "record_sketch_sort",

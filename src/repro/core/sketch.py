@@ -399,6 +399,55 @@ def sketch_rank_bound_batch(stacked: SketchState) -> jax.Array:
             + jnp.int32(2))
 
 
+def sketch_merge_rows(stacked: SketchState) -> SketchState:
+    """Merge the K rows of one stacked summary into a SINGLE summary through
+    the ``sketch_merge_many`` pairwise tree (slack depth ceil(log2 K), not K
+    — DESIGN.md §6/§11).  K is static (the leading axis), so the whole merge
+    is one traced expression — the windowed service's merge-on-query
+    primitive: a stream's retained sub-window rows are gathered from the
+    slot table and merged per query instead of maintaining every possible
+    window alignment eagerly."""
+    k = stacked.values.shape[0]
+    parts = [jax.tree.map(lambda a, i=i: a[i:i + 1], stacked)
+             for i in range(k)]
+    return jax.tree.map(lambda a: a[0], sketch_merge_many(parts))
+
+
+def sketch_query_decayed(stacked: SketchState, factors: jax.Array,
+                         q) -> jax.Array:
+    """Exponential-decay weighted approximate quantile over K stacked
+    sub-window summaries (DESIGN.md §11).
+
+    ``factors`` is a (K,) float array of per-row decay multipliers (the
+    windowed service passes ``2^(-age/halflife)`` with age in ticks since
+    the sub-window opened).  Every sample's integer weight is scaled by its
+    row's factor, all lanes are ranked together, and the first sample whose
+    decayed cumulative weight reaches ``q * total`` is returned — i.e. the
+    q-quantile of the distribution in which a value ingested ``halflife``
+    ticks ago counts half as much as one ingested now.  Decay resolution is
+    the sub-window width: values inside one sub-window share a factor.
+
+    Weight-0 lanes (sentinel padding / compression duplicates) can never be
+    selected.  This is an approximate query by construction — decayed rank
+    error stays within the undecayed ``sketch_rank_bound`` of each row
+    scaled by its factor — there is no exact counterpart because the raw
+    ring stores no per-value timestamps finer than the tick."""
+    w = stacked.weights.astype(jnp.float32) \
+        * jnp.asarray(factors, jnp.float32)[:, None]
+    v = stacked.values.reshape(-1)
+    w = w.reshape(-1)
+    order = jnp.argsort(v)
+    v, w = v[order], w[order]
+    cum = jnp.cumsum(w)
+    target = jnp.asarray(q, jnp.float32) * cum[-1]
+    # cum only increases at positive-weight lanes, so the first lane where
+    # it reaches the target always carries weight (guard anyway: a
+    # zero-total pathological input must not surface a sentinel)
+    hit = (cum >= target) & (w > 0)
+    pos = jnp.where(w > 0, jnp.arange(v.shape[0]), -1)
+    return v[jnp.where(jnp.any(hit), jnp.argmax(hit), jnp.argmax(pos))]
+
+
 def sketch_merge(a: SketchState, b: SketchState) -> SketchState:
     """Merge two stream summaries (mergeable-summaries property): concat the
     sorted runs, re-compress to a's budget.  Each side's samples can miss at

@@ -7,11 +7,13 @@ here they are unit-tested state machines the training loop already calls.
 
 Straggler detection is itself a use of the paper: per-step durations stream
 into a service-owned quantile stream and a host is flagged when it exceeds
-the exact p99 step time by a margin — quantile monitoring with bounded
-sketch memory, answered by a warm 2-action query (no per-decision sort).
-The service stream also makes the monitor preemption-durable: its state
-rides the service snapshot (``checkpoint.save_service_snapshot``), so a
-restored job resumes flagging from the same duration distribution.
+the exact WINDOWED p99 step time by a margin (the last ``window`` steps,
+DESIGN.md §11) — quantile monitoring with window-bounded sketch memory,
+answered by a warm 2-action query (no per-decision sort), that tracks the
+current regime instead of averaging over the whole run.  The service
+stream also makes the monitor preemption-durable: its state (window state
+included) rides the service snapshot (``checkpoint.save_service_snapshot``),
+so a restored job resumes flagging from the same duration distribution.
 """
 from __future__ import annotations
 
@@ -45,40 +47,74 @@ class StragglerMonitor:
     """Quantile-based straggler detection over per-host step durations.
 
     A host is a straggler when its step time exceeds
-    ``factor * p(quantile)`` of the global duration distribution.  The
-    distribution lives in a stream (``"step_durations"``) on a
-    ``QuantileService`` — by default a private one, or pass ``service=`` to
-    co-tenant the monitor on the job's shared service so its state is
-    captured by ``checkpoint.save_service_snapshot`` and survives the
-    preemption path.  ``decide`` answers with the service's EXACT warm
-    quantile (no sketch-phase sort, no full history scan) and is
-    non-mutating — an unfed monitor never creates the stream.  The
-    training loop's response is deterministic batch skipping or rescale
-    via ``ElasticPlan``.
+    ``factor * p(quantile)`` of the step-duration distribution over the
+    last ``window`` recorded steps (ticks) — windowed, because an
+    all-history threshold goes blind to regime changes: after a cluster
+    speeds up (compile caches warm, a slow host is replaced), yesterday's
+    p99 would still dominate the threshold and today's stragglers would
+    pass under it.  ``window=None`` restores the all-history behavior.
+
+    The distribution lives in a stream (``"step_durations"``) on a
+    ``QuantileService`` — by default a private windowed one, or pass
+    ``service=`` to co-tenant the monitor on the job's shared service so
+    its state (including window state) is captured by
+    ``checkpoint.save_service_snapshot`` and survives the preemption path.
+    ``decide`` answers with the service's EXACT warm windowed quantile (no
+    sketch-phase sort, no full history scan) and is genuinely
+    non-mutating: an unfed monitor never creates the stream, and its
+    queries pass ``commit=False`` so they read committed state under the
+    read lock only — a ``decide`` racing a producer's staged ingest can
+    never land that producer's chunks.  The training loop's response is
+    deterministic batch skipping or rescale via ``ElasticPlan``.
     """
 
     STREAM = "step_durations"
 
     def __init__(self, quantile: float = 0.99, factor: float = 2.0,
-                 eps: float = 0.01, min_samples: int = 64, service=None):
+                 eps: float = 0.01, min_samples: int = 64, service=None,
+                 window: Optional[int] = 256, window_subs: int = 8):
         # lazy import: distributed must not pull the launch layer eagerly
         from repro.launch.quantile_service import QuantileService
-        self.service = service if service is not None \
-            else QuantileService(eps=eps)
+        if service is None:
+            service = (QuantileService(eps=eps, window_ticks=window,
+                                       window_subs=window_subs)
+                       if window is not None else QuantileService(eps=eps))
+        self.service = service
+        # clamp to the service's retention: a shared service may keep less
+        # history than asked for; an unwindowed one answers any window
+        svc_window = getattr(service, "window_ticks", None)
+        if svc_window is not None:
+            window = svc_window if window is None else min(window,
+                                                           svc_window)
+        self.window = window
         self.quantile = quantile
         self.factor = factor
         self.min_samples = min_samples
 
     def record(self, durations: Dict[str, float]) -> None:
+        """Feed one step's per-host durations (one service tick).  An
+        empty mapping is a complete no-op — no stream creation, no tick."""
+        if not durations:
+            return
         self.service.ingest(
             self.STREAM,
             np.asarray(list(durations.values()), dtype=np.float32))
 
     def decide(self, durations: Dict[str, float]) -> List[str]:
-        if self.service.stream_count(self.STREAM) < self.min_samples:
-            return []
-        thr = self.factor * float(self.service.exact(self.STREAM,
-                                                     self.quantile))
+        """Flag hosts above ``factor * p(quantile)`` of the windowed
+        distribution.  Non-mutating (reads committed state only)."""
+        if self.window is not None:
+            if (self.service.window_count(self.STREAM, window=self.window)
+                    < self.min_samples):
+                return []
+            p = self.service.windowed(self.STREAM, self.quantile,
+                                      window=self.window, commit=False)
+        else:
+            if self.service.stream_count(self.STREAM) < self.min_samples:
+                return []
+            p = self.service.exact(self.STREAM, self.quantile,
+                                   commit=False)
+        thr = self.factor * float(p)
         return [h for h, d in durations.items() if d > thr]
 
 

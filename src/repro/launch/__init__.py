@@ -2,12 +2,12 @@
 roofline analysis, train/serve drivers, and the streaming quantile service
 (``quantile_service.QuantileService`` / ``StreamingCalibrator``) with its
 threaded ingest pipeline (``ingest_pool.IngestPool``)."""
-from .quantile_service import (QuantileService, StreamingCalibrator,
+from .quantile_service import (QuantileService, StreamingCalibrator, Window,
                                ingest_dispatches, record_ingest_dispatch,
                                reset_ingest_dispatches)
 from .ingest_pool import IngestPool, default_ingest_workers
 
-__all__ = ["QuantileService", "StreamingCalibrator",
+__all__ = ["QuantileService", "StreamingCalibrator", "Window",
            "ingest_dispatches", "record_ingest_dispatch",
            "reset_ingest_dispatches",
            "IngestPool", "default_ingest_workers"]

@@ -60,11 +60,32 @@ on the shared table.  Three faces serve the threaded pipeline
     does not depend on arrival order), so concurrent ingest keeps
     ``exact*`` bit-identical to a serial replay of the same batches.
 
+Windowed queries (DESIGN.md §11): constructing with ``window_ticks=W_t``
+turns on ring-buffered sub-window sketching — each stream additionally
+maintains up to ``window_subs + 1`` mergeable fixed-budget sub-window rows
+IN THE SAME slot table (a fresh row opens every ``ceil(W_t/window_subs)``
+ticks, the oldest is retired back to the free list as the window slides),
+and tick-ring records older than ``W_t`` ticks are retired, so resident
+memory is bounded by the window, independent of total history length.
+``windowed(name, q, window=...)`` then answers the EXACT quantile of the
+values inside a trailing window (count- or tick-based): the pivot comes
+from a ``sketch_merge_rows`` merge-on-query over the covering sub-window
+rows (no sketch-phase sort — the warm path), count+extract runs only over
+the ring slices inside the window, and the candidate cap adds half the
+cover overcount to the merged sketch's tracked bound — with the same
+widen-and-retry fallback, so window answers are bit-identical to sorting
+the raw window.  ``approx_decayed`` reuses the sub-window rows for an
+exponential-decay weighted quantile (newer sub-windows count more).
+Without ``window_ticks`` the service behaves exactly as before (nothing is
+retired; ``windowed`` still works via a cold per-window pivot).
+
 Snapshot/restore: ``snapshot()`` captures the stacked table + tick ring +
 registry as a flat leaf list plus JSON-able metadata (the format
 ``checkpoint.save_service_snapshot`` persists); ``from_snapshot`` rebuilds
 a service whose warm ``exact()`` answers are bit-identical with zero
-history replay.
+history replay.  Window state (tick clock, sub-window registry, retention
+counters) rides the snapshot, so a restored windowed service resumes warm
+mid-window.
 
 Grouped streams (DESIGN.md §7): ``ingest_grouped(name, values, keys)``
 buffers keyed batches and ``grouped(name, qs, num_groups)`` answers the
@@ -90,6 +111,7 @@ from repro.core import engine, local_ops
 from repro.core.sketch import (SketchState, record_sketch_sort, sketch_budget,
                                sketch_init, sketch_init_stack,
                                sketch_merge_batch, sketch_merge_many,
+                               sketch_merge_rows, sketch_query_decayed,
                                sketch_query_rank,
                                sketch_query_rank_batch, sketch_rank_bound,
                                sketch_rank_bound_batch, sketch_update,
@@ -205,10 +227,17 @@ def _locked(kind: str):
 def _query(fn):
     """Query decorator: commit any staged host batches first (a write),
     then run the query under the read lock — so queries always see every
-    value handed to this service, and concurrent queries overlap."""
+    value handed to this service, and concurrent queries overlap.
+
+    Every decorated query accepts ``commit=False`` to skip that implicit
+    write: the query then reads COMMITTED state only, never mutates, and
+    staged-but-uncommitted values are invisible to it.  This is the
+    contract monitoring readers need (``StragglerMonitor.decide`` is
+    documented non-mutating — before this flag its threshold query could
+    land staged chunks mid-ingest)."""
     @functools.wraps(fn)
-    def wrapper(self, *args, **kwargs):
-        if self._staged:
+    def wrapper(self, *args, commit: bool = True, **kwargs):
+        if commit and self._staged:
             self.commit_staged()
         with self._rw.read():
             return fn(self, *args, **kwargs)
@@ -232,6 +261,32 @@ def _update_rows(stacked: SketchState, slots, matrix, n_valid) -> SketchState:
     rows = jax.tree.map(lambda a: a[slots], stacked)
     upd = sketch_update_batch(rows, matrix, n_valid)
     return jax.tree.map(lambda a, r: a.at[slots].set(r), stacked, upd)
+
+
+@jax.jit
+def _update_rows_doubled(stacked: SketchState, slots2, matrix,
+                         n_valid) -> SketchState:
+    """Windowed-mode ingest: ONE dispatch that advances both the
+    all-history row AND the current sub-window row of every touched stream.
+    ``slots2`` is (2S,) — row i of the (S, L) tick matrix feeds
+    ``slots2[i]`` (main) and ``slots2[S + i]`` (sub); the matrix is tiled
+    once so the batched update stays a single sort.  Rows with no valid
+    lanes point both entries at the main slot — a zero-length update leaves
+    the row bit-untouched, so the duplicate scatter writes identical
+    values."""
+    rows = jax.tree.map(lambda a: a[slots2], stacked)
+    m2 = jnp.concatenate([matrix, matrix], axis=0)
+    nv2 = jnp.concatenate([n_valid, n_valid])
+    upd = sketch_update_batch(rows, m2, nv2)
+    return jax.tree.map(lambda a, r: a.at[slots2].set(r), stacked, upd)
+
+
+# Merge-on-query pivot source for windowed queries: K gathered sub-window
+# rows -> ONE summary via the sketch_merge_rows pairwise tree.  jit's
+# shape-keyed cache specializes per cover size K, so a steady-state window
+# replays one traced dispatch per query.
+_merge_subs_jit = jax.jit(sketch_merge_rows)
+_decayed_jit = jax.jit(sketch_query_decayed)
 
 
 @jax.jit
@@ -412,15 +467,54 @@ def _resolve_fn(cap: int):
     return jax.jit(fn)
 
 
+@dataclasses.dataclass(frozen=True)
+class Window:
+    """Trailing-window spec for ``QuantileService.windowed`` — exactly one
+    of ``ticks`` (the last N ingest ticks on the service's logical clock;
+    one landed ``ingest_batch`` call is one tick) or ``values`` (the last N
+    values of the stream itself).  A bare ``int`` passed as ``window=``
+    means ``Window(ticks=...)``."""
+    ticks: Optional[int] = None
+    values: Optional[int] = None
+
+    def __post_init__(self):
+        if (self.ticks is None) == (self.values is None):
+            raise ValueError("specify exactly one of Window(ticks=...) or "
+                             "Window(values=...)")
+        span = self.ticks if self.ticks is not None else self.values
+        if int(span) < 1:
+            raise ValueError(f"window must be positive, got {span}")
+
+
+def _as_window(window) -> Window:
+    if isinstance(window, Window):
+        return window
+    return Window(ticks=int(window))
+
+
+@dataclasses.dataclass
+class _SubWindow:
+    """One live sub-window of one stream: the slot-table row its sketch
+    lives in, the sub-window index on the tick clock (it spans ticks
+    ``[index*sub_ticks, (index+1)*sub_ticks - 1]``), and the number of
+    values folded into it."""
+    slot: int
+    index: int
+    n: int
+
+
 @dataclasses.dataclass
 class _TickRecord:
     """One batched ingest tick: a sentinel-padded (S_tick, L) value matrix
     plus, per row, the slot it fed (-1 after that stream is dropped) and
     the count of valid leading lanes.  Rows are sliced lazily at query
-    time — the ring IS the buffered population of every stream."""
+    time — the ring IS the buffered population of every stream.  ``tick``
+    is the record's position on the service's logical clock (windowed mode
+    retires records older than ``window_ticks``)."""
     data: jax.Array           # (S_tick, L) device matrix, sentinel-padded
     slots: np.ndarray         # (S_tick,) int32 slot ids, -1 = dropped
     n_valid: np.ndarray       # (S_tick,) int32 valid lanes per row
+    tick: int = 0             # logical-clock stamp
 
 
 @dataclasses.dataclass
@@ -452,7 +546,8 @@ class QuantileService:
 
     def __init__(self, *, eps: float = 0.01, budget: Optional[int] = None,
                  dtype=jnp.float32, fused: bool = False,
-                 check_nans: bool = True, backend=None):
+                 check_nans: bool = True, backend=None,
+                 window_ticks: Optional[int] = None, window_subs: int = 8):
         """Exactness guarantee: ``exact``/``exact_all``/``grouped`` answers
         are bit-identical to a full sort of everything ingested, for every
         combination of the flags below — they steer data movement only.
@@ -464,6 +559,17 @@ class QuantileService:
         None selecting per platform at trace time — compiled Pallas on TPU,
         jitted jnp fallback on CPU (``kernels.dispatch.select_backend``).
         Ignored without ``fused``.
+
+        ``window_ticks=W_t`` opts into windowed retention (DESIGN.md §11):
+        ring records and sub-window sketch rows older than ``W_t`` ticks
+        are retired, bounding resident memory by the window instead of
+        total history; ``window_subs`` sets the number of sub-windows the
+        window is split into (pivot-merge cost and decay resolution —
+        each sub spans ``ceil(W_t/window_subs)`` ticks).  All-history
+        ``exact``/``exact_all`` raise once a stream's history extends past
+        the horizon (use ``windowed``); ``approx`` stays available.
+        Without ``window_ticks`` nothing is ever retired and the service
+        behaves exactly as before.
 
         NaN policy: reject at ingest (DESIGN.md §7), so queries never see a
         NaN.  ``check_nans=False`` opts out of that check: it is a blocking
@@ -479,6 +585,18 @@ class QuantileService:
         self.fused = fused
         self.backend = backend
         self.check_nans = check_nans
+        # --- windowed retention (DESIGN.md §11) ---------------------------
+        if window_ticks is not None and int(window_ticks) < 1:
+            raise ValueError(f"window_ticks must be >= 1, got {window_ticks}")
+        if int(window_subs) < 1:
+            raise ValueError(f"window_subs must be >= 1, got {window_subs}")
+        self.window_ticks = int(window_ticks) if window_ticks else None
+        self.window_subs = int(window_subs)
+        self._sub_ticks = (-(-self.window_ticks // self.window_subs)
+                           if self.window_ticks else 0)
+        self._tick = 0                               # logical clock
+        self._subs: Dict[int, List[_SubWindow]] = {}  # main slot -> subs
+        self._retained: List[int] = []               # per-slot live values
         # --- concurrency (DESIGN.md §10) ----------------------------------
         # Mutators (ingest/fold/drop/stage-commit) take the write side,
         # queries the read side; worker threads never touch a shared
@@ -520,28 +638,47 @@ class QuantileService:
         record_ingest_dispatch()
         self._free.extend(range(self._capacity, new_cap))
         self._counts.extend([0] * add)
+        self._retained.extend([0] * add)
         self._capacity = new_cap
+
+    def _alloc_slots(self, count: int) -> List[int]:
+        """Take ``count`` slots off the free list (growing the table as
+        needed) with recycled rows re-initialized in ONE batched reset — a
+        recycled slot must never leak its previous tenant's sketch row (the
+        ring-record side of that guarantee is ``drop_stream`` marking rows
+        -1)."""
+        if len(self._free) < count:
+            self._grow(self._capacity + (count - len(self._free)))
+        out, recycled = [], []
+        for _ in range(count):
+            slot = self._free.pop()
+            if slot in self._dirty:
+                recycled.append(slot)
+                self._dirty.discard(slot)
+            self._counts[slot] = 0
+            self._retained[slot] = 0
+            out.append(slot)
+        if recycled:
+            self._stacked = _reset_rows(
+                self._stacked, jnp.asarray(recycled, jnp.int32))
+            record_ingest_dispatch()
+        return out
+
+    def _free_slot(self, slot: int) -> None:
+        """Return one slot to the free list (sketch row re-init deferred to
+        the next ``_alloc_slots`` via the dirty set)."""
+        self._free.append(slot)
+        self._dirty.add(slot)
+        self._counts[slot] = 0
+        self._retained[slot] = 0
 
     def _ensure_slots(self, names: Sequence[str]) -> np.ndarray:
         """Register any unknown names (growing the table as needed) and
         return the slot row per name."""
         missing = [n for n in names if n not in self._names]
         if missing:
-            if len(self._free) < len(missing):
-                self._grow(self._capacity
-                           + (len(missing) - len(self._free)))
-            recycled = []
-            for n in missing:
-                slot = self._free.pop()
-                if slot in self._dirty:
-                    recycled.append(slot)
-                    self._dirty.discard(slot)
+            for n, slot in zip(missing, self._alloc_slots(len(missing))):
                 self._names[n] = slot
-                self._counts[slot] = 0
-            if recycled:
-                self._stacked = _reset_rows(
-                    self._stacked, jnp.asarray(recycled, jnp.int32))
-                record_ingest_dispatch()
         return np.asarray([self._names[n] for n in names], dtype=np.int32)
 
     def _row_state(self, slot: int) -> SketchState:
@@ -549,13 +686,74 @@ class QuantileService:
 
     def _chunks_for(self, slot: int) -> List[jax.Array]:
         """Lazily slice this slot's buffered chunks out of the tick ring."""
+        return [rec.data[i, :nv] for rec, i, nv in self._stream_rows(slot)]
+
+    def _stream_rows(self, slot: int):
+        """This slot's non-empty ring rows as (record, row, n_valid)
+        triples, oldest tick first (appends are clock-ordered, so list
+        order IS tick order)."""
         out = []
         for rec in self._ring:
             for i in np.nonzero(rec.slots == slot)[0]:
                 nv = int(rec.n_valid[i])
                 if nv:
-                    out.append(rec.data[int(i), :nv])
+                    out.append((rec, int(i), nv))
         return out
+
+    # -- windowed retention internals (DESIGN.md §11) ------------------------
+
+    def _rotate_subs(self, slots: np.ndarray, n_valid: np.ndarray,
+                     tick: int) -> np.ndarray:
+        """Per touched stream: retire sub-windows that slid past the
+        retention horizon (their slots go back to the free list), open a
+        fresh sub-window row when the tick crossed a ``sub_ticks`` boundary,
+        and account this tick's values.  Returns the (S,) sub-window slot
+        per tick row — rows with no valid lanes alias their main slot (the
+        doubled update leaves those bit-untouched).  Retirement is lazy
+        (on touch): an idle stream keeps at most ``window_subs + 1`` sub
+        rows parked, never more."""
+        idx = tick // self._sub_ticks
+        horizon = tick + 1 - self.window_ticks   # oldest retained tick
+        sub_slots = np.empty(len(slots), np.int32)
+        need_new = []
+        for i, (slot, nv) in enumerate(zip(slots, n_valid)):
+            if not nv:
+                sub_slots[i] = slot
+                continue
+            subs = self._subs.setdefault(int(slot), [])
+            while subs and (subs[0].index + 1) * self._sub_ticks <= horizon:
+                self._free_slot(subs.pop(0).slot)
+            if subs and subs[-1].index == idx:
+                sub_slots[i] = subs[-1].slot
+            else:
+                need_new.append(i)
+        if need_new:
+            for i, slot in zip(need_new, self._alloc_slots(len(need_new))):
+                self._subs[int(slots[i])].append(
+                    _SubWindow(slot=slot, index=idx, n=0))
+                sub_slots[i] = slot
+        for slot, nv in zip(slots, n_valid):
+            if nv:
+                self._subs[int(slot)][-1].n += int(nv)
+        return sub_slots
+
+    def _retire_ring(self) -> None:
+        """Drop ring records that slid fully past the retention horizon,
+        crediting their values out of the per-slot retained counters.  The
+        ring holds at most ``window_ticks`` records afterwards, so windowed
+        memory is bounded by the window, not by history."""
+        horizon = self._tick - self.window_ticks
+        if horizon <= 0:
+            return
+        keep = []
+        for rec in self._ring:
+            if rec.tick >= horizon:
+                keep.append(rec)
+                continue
+            for s, nv in zip(rec.slots, rec.n_valid):
+                if s >= 0:
+                    self._retained[int(s)] -= int(nv)
+        self._ring = keep
 
     # -- stream lifecycle ---------------------------------------------------
 
@@ -576,11 +774,15 @@ class QuantileService:
 
     @_locked("w")
     def drop_stream(self, name: str) -> None:
+        """Forget one stream: its slot (and any sub-window slots) return to
+        the free list, its ring rows are marked dead (-1) so a future
+        tenant of the recycled slot can never slice them into its chunks,
+        windows, or ``exact_all`` groups."""
         slot = self._names.pop(name, None)
         if slot is not None:
-            self._free.append(slot)
-            self._dirty.add(slot)
-            self._counts[slot] = 0
+            for sub in self._subs.pop(slot, []):
+                self._free_slot(sub.slot)
+            self._free_slot(slot)
             for rec in self._ring:
                 rec.slots[rec.slots == slot] = -1
             # drop records no live stream references
@@ -637,6 +839,11 @@ class QuantileService:
         ``_nan_checked`` marks batches already validated host-side (the
         ``stage``/``commit_staged`` path) so the blocking device check is
         not paid twice.
+
+        An ALL-empty tick (no names, or every batch zero-length — host or
+        device) is a complete no-op: no stream registration, no sketch
+        sort, no ring record, no logical-clock advance.  A MIXED tick still
+        registers its empty rows' streams (count 0, sketch row untouched).
         """
         names = list(names)
         batches = list(batches)
@@ -651,8 +858,6 @@ class QuantileService:
             raise ValueError(f"unknown transform {transform!r}; "
                              f"have {sorted(_TRANSFORMS)}")
 
-        slots = self._ensure_slots(names)
-
         device_in = transform is not None or any(
             isinstance(b, jax.Array) for b in batches)
         if device_in:
@@ -662,7 +867,9 @@ class QuantileService:
             lengths = [b.size for b in batches]
         length = max(lengths)
         if length == 0:
-            return                      # streams registered, nothing to fold
+            return                      # all-empty tick: complete no-op
+
+        slots = self._ensure_slots(names)
 
         if device_in:
             matrix = _pack_fn(length, self.dtype.name, transform)(*batches)
@@ -679,15 +886,27 @@ class QuantileService:
         if self.check_nans and not _nan_checked:
             local_ops.reject_nans(matrix, "QuantileService.ingest")
 
+        tick = self._tick
         record_sketch_sort()            # sketch_update_batch sorts the tick
         record_ingest_dispatch()        # the one batched update dispatch
-        self._stacked = _update_rows(self._stacked,
-                                     jnp.asarray(slots), matrix,
-                                     jnp.asarray(n_valid))
+        if self.window_ticks is not None:
+            sub_slots = self._rotate_subs(slots, n_valid, tick)
+            self._stacked = _update_rows_doubled(
+                self._stacked,
+                jnp.asarray(np.concatenate([slots, sub_slots])),
+                matrix, jnp.asarray(n_valid))
+        else:
+            self._stacked = _update_rows(self._stacked,
+                                         jnp.asarray(slots), matrix,
+                                         jnp.asarray(n_valid))
         for slot, nv in zip(slots, n_valid):
             self._counts[int(slot)] += int(nv)
+            self._retained[int(slot)] += int(nv)
         self._ring.append(_TickRecord(data=matrix, slots=slots.copy(),
-                                      n_valid=n_valid))
+                                      n_valid=n_valid, tick=tick))
+        self._tick = tick + 1
+        if self.window_ticks is not None:
+            self._retire_ring()
 
     @_locked("w")
     def ingest_grouped(self, name: str, values, keys) -> None:
@@ -768,9 +987,12 @@ class QuantileService:
     # -- fold (Quancurrent-style worker buffers) -----------------------------
 
     def local_buffer(self) -> "QuantileService":
-        """A private worker-side buffer with this service's configuration —
-        ingest (or ``stage``) into it contention-free, then ``fold`` it
-        back in."""
+        """A private worker-side buffer with this service's sketch/engine
+        configuration — ingest (or ``stage``) into it contention-free, then
+        ``fold`` it back in.  Window config is deliberately NOT inherited:
+        a buffer has no meaningful tick clock (folds land its values at the
+        target's current tick), and a windowed target only accepts staged
+        data from buffers (see ``fold_many``)."""
         return QuantileService(eps=self.eps, budget=self.budget,
                                dtype=self.dtype, fused=self.fused,
                                check_nans=self.check_nans,
@@ -797,6 +1019,11 @@ class QuantileService:
         if mismatched:
             raise ValueError("cannot fold: config mismatch "
                              "(" + "; ".join(mismatched) + ")")
+        if other.window_ticks is not None:
+            raise ValueError(
+                "cannot fold a windowed buffer: its tick clock is private "
+                "and meaningless on the target — worker buffers must be "
+                "plain (local_buffer() makes them so)")
 
     def fold(self, other: "QuantileService") -> None:
         """Fold one worker buffer into this service: ONE batched
@@ -841,6 +1068,15 @@ class QuantileService:
 
         # 2. materialized slot rows: one sketch_merge_many dispatch --------
         tabled = [o for o in others if o._names and o._stacked is not None]
+        if tabled and self.window_ticks is not None:
+            # a buffer's materialized rows carry no tick attribution, so a
+            # windowed target cannot place them on its clock; the staged
+            # path above (what IngestPool uses) lands as a normal tick and
+            # stays fully supported
+            raise ValueError(
+                "cannot fold materialized worker tables into a windowed "
+                "service — stage() into the buffer (or ingest through the "
+                "shared service) so values land with a tick")
         if tabled:
             union = sorted({n for o in tabled for n in o._names})
             my_slots = self._ensure_slots(union)
@@ -853,18 +1089,26 @@ class QuantileService:
                 self._stacked, jnp.asarray(my_slots), tables, idxs)
             record_ingest_dispatch()
             slot_of = {n: int(m) for n, m in zip(union, my_slots)}
+            adopted = False
             for o in tabled:
                 remap = {int(t): slot_of[n] for n, t in o._names.items()}
                 for t, m in remap.items():
                     self._counts[m] += o._counts[t]
+                    self._retained[m] += o._counts[t]
                 for rec in o._ring:
                     new_slots = np.asarray(
                         [remap.get(int(s), -1) for s in rec.slots],
                         dtype=np.int32)
                     if (new_slots >= 0).any():
+                        # adopted records land at the CURRENT tick: the
+                        # buffer's own clock is meaningless here, and
+                        # stamping now keeps the ring clock-ordered
                         self._ring.append(_TickRecord(
                             data=rec.data, slots=new_slots,
-                            n_valid=rec.n_valid.copy()))
+                            n_valid=rec.n_valid.copy(), tick=self._tick))
+                        adopted = True
+            if adopted:
+                self._tick += 1
 
         # 3. grouped streams: host-side adoption ---------------------------
         for other in others:
@@ -882,6 +1126,19 @@ class QuantileService:
         if slot is None or self._counts[slot] == 0:
             raise ValueError(f"stream {name!r} is empty")
         return slot
+
+    def _require_full_history(self, name: str, slot: int) -> None:
+        """All-history exact queries need the whole population resident; a
+        windowed service retires ring records past the horizon, after which
+        only ``windowed``/``approx`` remain answerable for that stream."""
+        if self._retained[slot] < self._counts[slot]:
+            raise ValueError(
+                f"stream {name!r}: {self._counts[slot] - self._retained[slot]}"
+                f" of {self._counts[slot]} values have been retired past the "
+                f"retention horizon ({self.window_ticks} ticks) — "
+                f"all-history exact queries are unavailable on a windowed "
+                f"service once history slides out; use windowed() or "
+                f"approx()")
 
     @_query
     def approx(self, name: str, q: float):
@@ -902,6 +1159,7 @@ class QuantileService:
         same count+extract+resolve.  Both are exact, hence bit-identical.
         """
         slot = self._require(name)
+        self._require_full_history(name, slot)
         n = self._counts[slot]
         k = local_ops.target_rank(n, q)
         chunks = self._chunks_for(slot)
@@ -916,6 +1174,100 @@ class QuantileService:
             pivot, bound = self._cold_pivot(chunks, k)
         cap = min(n, _round_up(bound + 2, 128))
         return self._count_extract_resolve(chunks, n, k, pivot, cap)
+
+    @_query
+    def windowed(self, name: str, q: float, *, window):
+        """EXACT q-quantile of the values inside a trailing window
+        (DESIGN.md §11) — bit-identical to sorting the raw window.
+
+        ``window`` is a ``Window`` (``Window(ticks=N)`` for the last N
+        ingest ticks, ``Window(values=N)`` for the stream's last N values)
+        or a bare int meaning ticks.  On a windowed service this is a WARM
+        query: the pivot comes from merging the covering sub-window sketch
+        rows (``sketch_merge_rows`` — no sketch-phase sort), the candidate
+        cap is the merged sketch's tracked bound plus half the cover
+        overcount (sub-windows over-cover the window by at most one
+        sub-window width on each side), and count+extract+resolve runs
+        only over the ring slices inside the window — widen-and-retry
+        keeps exactness unconditional.  On an unwindowed service the pivot
+        is rebuilt cold from the window slices (everything is retained, so
+        any window is answerable).
+
+        Raises when the window reaches past the retention horizon (unless
+        the stream's full history is still resident — then the window
+        simply covers everything and the answer equals ``exact()``), and
+        when no value falls inside the window."""
+        win = _as_window(window)
+        slot = self._require(name)
+        slices, n_w, start = self._window_slices(name, slot, win)
+        if n_w == 0:
+            raise ValueError(f"stream {name!r} has no values in the window")
+        k = local_ops.target_rank(n_w, q)
+        pivot, bound = self._window_pivot(slot, k, n_w, start, slices)
+        cap = min(n_w, _round_up(bound + 2, 128))
+        return self._count_extract_resolve(slices, n_w, k, pivot, cap)
+
+    @_locked("r")
+    def window_count(self, name: str, *, window) -> int:
+        """Values of ``name`` inside the trailing window — the windowed
+        analogue of ``stream_count``.  Non-mutating read: 0 for unknown
+        streams; a count window reports ``min(N, retained)``."""
+        win = _as_window(window)
+        slot = self._names.get(name)
+        if slot is None:
+            return 0
+        if win.values is not None:
+            return min(int(win.values), self._retained[slot])
+        start = self._tick - int(win.ticks)
+        return sum(nv for rec, _, nv in self._stream_rows(slot)
+                   if rec.tick >= start)
+
+    @_query
+    def approx_decayed(self, name: str, q: float, *,
+                       halflife: float):
+        """Exponential-decay weighted approximate q-quantile: a value
+        ingested ``halflife`` ticks ago counts half as much as one ingested
+        this tick (weight ``2^(-age/halflife)``, age measured from the
+        tick its sub-window opened — decay resolution is the sub-window
+        width).  O(window_subs · s) from the retained sub-window sketch
+        rows alone, no data pass; requires a windowed service (only it
+        maintains sub-window rows)."""
+        if self.window_ticks is None:
+            raise ValueError("approx_decayed requires a windowed service "
+                             "(construct with window_ticks=...)")
+        if not halflife > 0:
+            raise ValueError(f"halflife must be positive, got {halflife}")
+        slot = self._require(name)
+        subs = [s for s in self._subs.get(slot, []) if s.n > 0]
+        if not subs:
+            raise ValueError(f"stream {name!r} has no retained sub-windows")
+        now = self._tick - 1
+        ages = np.asarray(
+            [max(0, now - s.index * self._sub_ticks) for s in subs],
+            np.float32)
+        rows = jax.tree.map(
+            lambda a: a[jnp.asarray([s.slot for s in subs])], self._stacked)
+        return _decayed_jit(rows, jnp.asarray(np.exp2(-ages / halflife)),
+                            jnp.float32(q))
+
+    @_locked("r")
+    def memory_stats(self) -> Dict[str, int]:
+        """Resident-footprint counters (host-side bookkeeping only — no
+        device work).  ``resident_values`` is the total device-array lane
+        count held by the service: ring lanes + slot-table rows × budget.
+        The windowed bench asserts it stays flat as history grows — the
+        W × budget memory-bound claim."""
+        ring_lanes = sum(int(np.prod(rec.data.shape)) for rec in self._ring)
+        ring_values = sum(int(rec.n_valid.sum()) for rec in self._ring)
+        return {
+            "ring_records": len(self._ring),
+            "ring_values": ring_values,
+            "ring_lanes": ring_lanes,
+            "table_rows": self._capacity,
+            "live_rows": self._capacity - len(self._free),
+            "budget": self.budget,
+            "resident_values": ring_lanes + self._capacity * self.budget,
+        }
 
     @_query
     def exact_all(self, qs):
@@ -934,6 +1286,8 @@ class QuantileService:
                   if self._counts[s] > 0]
         if not active:
             return {}
+        for name, s in active:
+            self._require_full_history(name, s)
         G, Q = len(active), len(qs)
         slots = np.asarray([s for _, s in active], dtype=np.int32)
         gid_of_slot = {int(s): g for g, s in enumerate(slots)}
@@ -1112,6 +1466,83 @@ class QuantileService:
                 min(n_limit, _round_up(need + 2, 128)), G, Q, n_limit)
         return out
 
+    def _window_slices(self, name: str, slot: int, win: Window):
+        """The raw window population: device slices of this stream's ring
+        rows inside the window, their total count, and the oldest tick the
+        window touches (``None`` = the window covers the whole retained
+        history — every sub-window row is part of the pivot cover).
+
+        Feasibility: a window reaching past the retention horizon is
+        answerable only while the stream's FULL history is still resident
+        (then it degenerates to all-history); otherwise values it should
+        see are gone and we raise rather than silently narrow the window.
+        """
+        rows = self._stream_rows(slot)
+        total = self._counts[slot]
+        retained = self._retained[slot]
+        if win.ticks is not None:
+            start = self._tick - int(win.ticks)
+            horizon = self._tick - (self.window_ticks or self._tick)
+            if start < horizon and retained < total:
+                raise ValueError(
+                    f"window of {win.ticks} ticks reaches past the "
+                    f"retention horizon ({self.window_ticks} ticks) for "
+                    f"stream {name!r} (retained {retained} of {total} "
+                    f"values)")
+            slices, n_w = [], 0
+            for rec, i, nv in rows:
+                if rec.tick >= start:
+                    slices.append(rec.data[i, :nv])
+                    n_w += nv
+            return slices, n_w, (None if n_w == retained else start)
+        n_want = int(win.values)
+        if n_want >= total and retained == total:
+            return [rec.data[i, :nv] for rec, i, nv in rows], total, None
+        if n_want > retained:
+            raise ValueError(
+                f"window of {n_want} values reaches past the retention "
+                f"horizon for stream {name!r} (retained {retained} of "
+                f"{total} values)")
+        slices, remaining, start = [], n_want, None
+        for rec, i, nv in reversed(rows):
+            take = min(nv, remaining)
+            slices.append(rec.data[i, nv - take:nv])
+            remaining -= take
+            if remaining == 0:
+                start = rec.tick
+                break
+        return list(reversed(slices)), n_want, start
+
+    def _window_pivot(self, slot: int, k: int, n_w: int,
+                      start: Optional[int], slices: List[jax.Array]):
+        """Action 1 of a windowed query: a pivot near window rank ``k``
+        plus a rank-error bound the candidate cap is sized from.
+
+        Warm path (windowed service): merge the sub-window rows whose tick
+        span intersects ``[start, now]`` — every window value lives in one
+        of them, so the merged sketch covers a SUPERSET of the window with
+        overcount ``n_cover - n_w`` (stale mass at the cover's edges).
+        Querying the merged sketch at ``k + overcount//2`` centers the
+        window rank inside the cover's uncertainty, and the bound widens by
+        ``ceil(overcount/2)`` — the cap stays ~|sub-window| + sketch bound,
+        and the widen-and-retry fallback in the resolve keeps exactness
+        independent of this arithmetic.  Cold path (no sub-window rows:
+        unwindowed service, or a stream restored from a pre-window
+        snapshot): rebuild a sketch from the window slices themselves."""
+        subs = [s for s in self._subs.get(slot, [])
+                if s.n > 0 and (start is None
+                                or (s.index + 1) * self._sub_ticks > start)]
+        if not subs:
+            return self._cold_pivot(slices, k)
+        n_cover = sum(s.n for s in subs)
+        over = max(0, n_cover - n_w)
+        rows = jax.tree.map(
+            lambda a: a[jnp.asarray([s.slot for s in subs])], self._stacked)
+        merged = _merge_subs_jit(rows)
+        pivot = _query_jit(merged, k + over // 2)
+        bound = int(sketch_rank_bound(merged)) + (over + 1) // 2
+        return pivot, bound
+
     def _cold_pivot(self, chunks: List[jax.Array], k: int):
         """The stateless job's action 1: re-sketch every buffered chunk from
         scratch (one sort per chunk — ticks the sketch-sort counter), merge,
@@ -1180,7 +1611,10 @@ class QuantileService:
                 leaves.extend([v, k])
             grouped_meta[name] = {"chunks": len(gs.chunks), "n": gs.n}
         extra = {
-            "format": 1,
+            # format 2 adds the window-state keys below; from_snapshot
+            # still reads format-1 snapshots (missing keys default to the
+            # unwindowed behavior they were saved under)
+            "format": 2,
             "eps": self.eps,
             "budget": self.budget,
             "dtype": self.dtype.name,
@@ -1194,6 +1628,13 @@ class QuantileService:
             "counts": list(self._counts),
             "num_ticks": len(self._ring),
             "grouped": grouped_meta,
+            "window_ticks": self.window_ticks,
+            "window_subs": self.window_subs,
+            "tick": self._tick,
+            "ring_ticks": [rec.tick for rec in self._ring],
+            "retained": list(self._retained),
+            "subs": {str(slot): [[s.slot, s.index, s.n] for s in subs]
+                     for slot, subs in self._subs.items()},
         }
         return leaves, extra
 
@@ -1207,7 +1648,9 @@ class QuantileService:
         svc = cls(eps=extra["eps"], budget=extra["budget"],
                   dtype=extra["dtype"],
                   fused=extra["fused"] if fused is None else fused,
-                  check_nans=extra["check_nans"], backend=backend)
+                  check_nans=extra["check_nans"], backend=backend,
+                  window_ticks=extra.get("window_ticks"),
+                  window_subs=extra.get("window_subs", 8))
         it = iter(leaves)
         if extra["has_table"]:
             svc._stacked = SketchState(values=jnp.asarray(next(it)),
@@ -1219,12 +1662,24 @@ class QuantileService:
         svc._free = [int(s) for s in extra["free"]]
         svc._dirty = {int(s) for s in extra["dirty"]}
         svc._counts = [int(c) for c in extra["counts"]]
-        for _ in range(int(extra["num_ticks"])):
+        num_ticks = int(extra["num_ticks"])
+        # format-1 snapshots carry no window state: the ring orders ticks
+        # 0..T-1, nothing was ever retained-limited, no sub-window rows
+        ring_ticks = [int(t) for t in
+                      extra.get("ring_ticks", range(num_ticks))]
+        svc._tick = int(extra.get("tick", num_ticks))
+        svc._retained = [int(c) for c in
+                         extra.get("retained", extra["counts"])]
+        svc._subs = {
+            int(slot): [_SubWindow(slot=int(s), index=int(i), n=int(n))
+                        for s, i, n in subs]
+            for slot, subs in extra.get("subs", {}).items()}
+        for t in ring_ticks:
             data = jnp.asarray(next(it))
             slots = np.asarray(next(it)).astype(np.int32)
             n_valid = np.asarray(next(it)).astype(np.int32)
             svc._ring.append(_TickRecord(data=data, slots=slots,
-                                         n_valid=n_valid))
+                                         n_valid=n_valid, tick=t))
         for name, meta in extra["grouped"].items():
             gs = _GroupedStream([], [], int(meta["n"]))
             for _ in range(int(meta["chunks"])):

@@ -1,0 +1,232 @@
+"""Service-contract bugfix sweep (ISSUE 10 satellites S1–S3).
+
+Three contracts the service's docstrings promise, each pinned here so a
+regression is a test failure and not a silent behavior change:
+
+  S1  ``StragglerMonitor.decide`` (and any ``commit=False`` query) is
+      genuinely non-mutating: a read racing a producer's staged ingest
+      must never land those chunks.
+  S2  Empty-batch ingest is well-defined on every path (host ndarray,
+      device array, transform, mixed tick, all-empty tick): an empty row
+      registers the stream at count 0; an ALL-empty tick is a complete
+      no-op — no registration, no sort, no ring record, no tick.
+  S3  ``drop_stream`` leaks nothing through slot recycling: a recycled
+      slot's tick-ring slices and sub-window rows never see the previous
+      tenant's values, byte-for-byte, even under drop → recycle →
+      re-ingest churn.
+"""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import reset_sketch_sorts, sketch_sorts
+from repro.distributed import StragglerMonitor
+from repro.launch import QuantileService
+
+
+def _assert_bits(got, want, msg):
+    assert np.asarray(got).tobytes() == np.asarray(want).tobytes(), \
+        (msg, got, want)
+
+
+class TestDecideNonMutating:
+    """S1: decide reads committed state only."""
+
+    def _fingerprint(self, svc):
+        return (svc.staged_count, svc._tick, len(svc._ring),
+                dict(svc._names), list(svc._counts))
+
+    def test_decide_does_not_land_staged_chunks(self):
+        """A producer has staged chunks but not committed; a concurrent
+        decide must neither commit them nor perturb any service state."""
+        mon = StragglerMonitor(min_samples=8, window=16)
+        svc = mon.service
+        for _ in range(5):
+            mon.record({f"h{i}": 1.0 for i in range(4)})
+        # producer stages mid-flight work (the race decide must not win)
+        for _ in range(3):
+            svc.stage(mon.STREAM, np.full(4, 100.0, np.float32))
+        before = self._fingerprint(svc)
+        assert before[0] == 12
+        flagged = mon.decide({"ok": 1.0, "slow": 50.0})
+        assert self._fingerprint(svc) == before, \
+            "decide landed staged chunks or advanced service state"
+        # the staged 100.0s are invisible: 50.0 is clearly > 2 * p99(1.0)
+        assert flagged == ["slow"]
+        # the producer's own commit still lands them afterwards
+        svc.commit_staged()
+        assert svc.staged_count == 0
+        assert svc.stream_count(mon.STREAM) == 5 * 4 + 3 * 4
+
+    def test_commit_false_on_plain_queries(self):
+        svc = QuantileService(eps=0.05)
+        svc.ingest("s", np.arange(8, dtype=np.float32))
+        svc.stage("s", np.full(4, 99.0, np.float32))
+        want = np.float32(7.0)
+        _assert_bits(svc.exact("s", 0.999, commit=False), want, "exact")
+        assert svc.staged_count == 4
+        # default commit=True still folds staged work first
+        got = svc.exact("s", 0.999)
+        assert svc.staged_count == 0
+        _assert_bits(got, np.float32(99.0), "exact commit=True")
+
+    def test_unfed_monitor_never_creates_stream(self):
+        mon = StragglerMonitor(min_samples=1, window=16)
+        assert mon.decide({"h0": 5.0}) == []
+        assert mon.service.stream_count(mon.STREAM) == 0
+        assert mon.STREAM not in mon.service._names
+
+    def test_record_empty_is_noop(self):
+        mon = StragglerMonitor(min_samples=1, window=16)
+        mon.record({})
+        assert mon.service._tick == 0
+        assert mon.STREAM not in mon.service._names
+
+
+class TestEmptyBatchIngest:
+    """S2: empty batches on every ingest path."""
+
+    @pytest.mark.parametrize("empty", [
+        np.array([], np.float32),
+        jnp.array([], jnp.float32),
+        [],
+    ], ids=["host", "device", "list"])
+    def test_all_empty_tick_is_complete_noop(self, empty):
+        for svc in (QuantileService(eps=0.05),
+                    QuantileService(eps=0.05, window_ticks=4)):
+            reset_sketch_sorts()
+            svc.ingest("s", empty)
+            assert sketch_sorts() == 0, "all-empty tick dispatched a sort"
+            assert "s" not in svc._names, "all-empty tick registered stream"
+            assert svc._tick == 0, "all-empty tick advanced the clock"
+            assert len(svc._ring) == 0, "all-empty tick appended a record"
+            svc.ingest_batch(["a", "b"], [empty, empty])
+            assert svc._names == {} and svc._tick == 0
+
+    def test_mixed_tick_registers_empty_rows(self):
+        """One non-empty row makes the tick land; the empty rows' streams
+        register at count 0 and stay queryable-after-feed."""
+        for svc in (QuantileService(eps=0.05),
+                    QuantileService(eps=0.05, window_ticks=4)):
+            svc.ingest_batch(["a", "b"], [np.arange(6, dtype=np.float32),
+                                          np.array([], np.float32)])
+            assert svc.stream_count("a") == 6
+            assert svc.stream_count("b") == 0
+            assert svc._tick == 1 and len(svc._ring) == 1
+            with pytest.raises(ValueError, match="empty"):
+                svc.exact("b", 0.5)
+            svc.ingest("b", np.full(3, 2.0, np.float32))
+            _assert_bits(svc.exact("b", 0.5), np.float32(2.0), "b median")
+
+    def test_empty_then_nonempty_same_stream(self):
+        svc = QuantileService(eps=0.05, window_ticks=4)
+        svc.ingest_batch(["a", "b"],
+                         [np.array([], np.float32), np.ones(2, np.float32)])
+        svc.ingest("a", np.arange(5, dtype=np.float32))
+        _assert_bits(svc.windowed("a", 0.999, window=4), np.float32(4.0),
+                     "a max")
+        assert svc.window_count("a", window=4) == 5
+
+    def test_empty_through_transform_and_stage(self):
+        svc = QuantileService(eps=0.05)
+        svc.ingest_batch(["t"], [np.array([], np.float32)],
+                         transform="abs_f32")
+        assert svc._tick == 0 and len(svc._ring) == 0
+        svc.stage("t", np.array([], np.float32), transform="abs_f32")
+        svc.commit_staged()
+        assert "t" not in svc._names or svc.stream_count("t") == 0
+        svc.ingest_batch(["t"], [-np.arange(4, dtype=np.float32)],
+                         transform="abs_f32")
+        _assert_bits(svc.exact("t", 0.999), np.float32(3.0), "transform")
+
+
+class TestDropRecycleParity:
+    """S3: drop → recycle → re-ingest leaves zero cross-tenant leakage."""
+
+    @pytest.mark.parametrize("windowed", [False, True],
+                             ids=["plain", "windowed"])
+    def test_churn_bit_parity_with_fresh_service(self, windowed):
+        """Churn streams through drop/recycle on one service while a twin
+        sees only the surviving data; every answer must match bit-for-bit
+        (exact, exact_all, windowed) — any recycled-slot leakage (old
+        tenant values in ring slices or sub rows) breaks parity."""
+        kw = dict(eps=0.05)
+        if windowed:
+            kw.update(window_ticks=6, window_subs=3)
+        churn = QuantileService(**kw)
+        fresh = QuantileService(**kw)
+        rng = np.random.default_rng(21)
+        ticks: list = []                        # per-tick {name: batch}
+        gen = 0
+        for t in range(24):
+            if t % 6 == 0 and gen:
+                churn.drop_stream(f"g{gen - 1}")
+            if t % 6 == 0:
+                gen += 1
+            # keepalive rides every tick so both clocks stay aligned
+            feed = {"keep": rng.normal(size=5).astype(np.float32),
+                    f"g{gen - 1}": (rng.normal(size=rng.integers(3, 12))
+                                    * gen).astype(np.float32)}
+            names = sorted(feed)
+            churn.ingest_batch(names, [feed[n] for n in names])
+            ticks.append(feed)
+        dropped = {f"g{g}" for g in range(gen - 1)}
+        survivors = {n for feed in ticks for n in feed} - dropped
+        # the twin sees only surviving streams, on the SAME ticks
+        for feed in ticks:
+            names = sorted(n for n in feed if n in survivors)
+            fresh.ingest_batch(names, [feed[n] for n in names])
+        assert churn._tick == fresh._tick == 24
+        if windowed:
+            for name in survivors:
+                for w in (2, 6):
+                    n_in = sum(feed[name].size for t, feed in
+                               enumerate(ticks)
+                               if t >= 24 - w and name in feed)
+                    if n_in == 0:
+                        continue
+                    _assert_bits(churn.windowed(name, 0.5, window=w),
+                                 fresh.windowed(name, 0.5, window=w),
+                                 (name, w))
+                    assert (churn.window_count(name, window=w) ==
+                            fresh.window_count(name, window=w) == n_in)
+        else:
+            got = churn.exact_all((0.25, 0.75))
+            want = fresh.exact_all((0.25, 0.75))
+            assert set(got) == survivors
+            for name in got:
+                _assert_bits(got[name], want[name], name)
+
+    def test_recycled_slot_never_slices_previous_tenant(self):
+        """The sharpest leak: victim's huge values sit in old ring records
+        at the recycled slot's row — the successor's window must not see
+        them."""
+        svc = QuantileService(eps=0.05, window_ticks=8, window_subs=4)
+        for t in range(4):
+            svc.ingest_batch(["keep", "victim"],
+                             [np.full(3, 1.0, np.float32),
+                              np.full(3, 1e9, np.float32)])
+        victim_slot = svc._names["victim"]
+        svc.drop_stream("victim")
+        svc.ingest("successor", np.full(3, 2.0, np.float32))
+        assert svc._names["successor"] == victim_slot, \
+            "test premise: slot must be recycled"
+        assert svc.window_count("successor", window=8) == 3
+        _assert_bits(svc.windowed("successor", 0.999, window=8),
+                     np.float32(2.0), "successor max")
+        _assert_bits(svc.exact("successor", 0.999), np.float32(2.0),
+                     "successor exact")
+        _assert_bits(svc.approx("successor", 0.999), np.float32(2.0),
+                     "successor approx (recycled sketch row)")
+
+    def test_drop_frees_sub_window_rows(self):
+        svc = QuantileService(eps=0.05, window_ticks=8, window_subs=4)
+        for t in range(10):
+            svc.ingest("s", np.full(4, float(t), np.float32))
+        slot = svc._names["s"]
+        parked = [sub.slot for sub in svc._subs[slot]]
+        assert parked
+        svc.drop_stream("s")
+        assert slot not in svc._subs
+        for s in parked + [slot]:
+            assert s in svc._free, "drop must free sub-window rows too"
